@@ -1,0 +1,2 @@
+"""Benchmark harness — one module per paper table/figure + framework
+selection benches + roofline reader. Entry: python -m benchmarks.run"""

@@ -1,0 +1,39 @@
+"""Shared benchmark plumbing: CSV emission + scaled-down defaults.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (project
+convention) plus human-readable tables to stderr. Paper-scale runs are
+hours of BLAS time; defaults here are scaled to CI budgets and can be
+raised with REPRO_BENCH_SCALE=full.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import Callable
+
+FULL = os.environ.get("REPRO_BENCH_SCALE", "ci") == "full"
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+    sys.stdout.flush()
+
+
+def note(msg: str) -> None:
+    print(msg, file=sys.stderr)
+    sys.stderr.flush()
+
+
+def time_call(fn: Callable, reps: int = 5, warmup: int = 1) -> float:
+    """Median wall seconds."""
+    import numpy as np
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))

@@ -1,0 +1,50 @@
+"""Muon Newton–Schulz association selection — the paper's AAᵀB in the
+optimizer. Times the three NS associations per weight shape on XLA-CPU
+and reports each discriminant's pick vs the measured winner.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.muon import (
+    _ns_iteration_gram,
+    _ns_iteration_right,
+    ns_algorithm_calls,
+    plan_ns_mode,
+)
+
+from .common import FULL, emit, note, time_call
+
+
+SHAPES = [(256, 256), (128, 1024), (1024, 128), (512, 4096)]
+if FULL:
+    SHAPES += [(1024, 8192), (4096, 4096), (2048, 16384)]
+
+
+def main():
+    rng = np.random.default_rng(0)
+    note("\n== Muon NS association selection (AAᵀB in the optimizer) ==")
+    note(f"{'shape':>14} {'gram_ms':>9} {'right_ms':>9} {'faster':>8} "
+         f"{'flops-pick':>11} {'model-pick':>11}")
+    for (m, k) in SHAPES:
+        if m > k:
+            m, k = k, m  # muon transposes to m <= k
+        x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+        fg = jax.jit(lambda x: _ns_iteration_gram(x, use_symmetry=False))
+        fr = jax.jit(_ns_iteration_right)
+        tg = time_call(lambda: jax.block_until_ready(fg(x)))
+        tr = time_call(lambda: jax.block_until_ready(fr(x)))
+        faster = "gram" if tg < tr else "right"
+        pf = plan_ns_mode(m, k, "flops")
+        pm = plan_ns_mode(m, k, "perfmodel")
+        note(f"{f'{m}x{k}':>14} {tg*1e3:>9.2f} {tr*1e3:>9.2f} "
+             f"{faster:>8} {pf:>11} {pm:>11}")
+        emit(f"muon_ns_{m}x{k}", min(tg, tr) * 1e6,
+             f"faster={faster};flops_pick={pf};model_pick={pm}")
+
+
+if __name__ == "__main__":
+    main()

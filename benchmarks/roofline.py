@@ -1,0 +1,72 @@
+"""§Roofline table renderer: reads the dry-run JSON artifacts and prints
+the per-(arch × shape × mesh) three-term roofline with bottleneck,
+MODEL_FLOPS/HLO ratio and roofline fraction.
+
+The dry-run itself (launch/dryrun.py) is the expensive producer; this
+reader keeps benchmarks/run.py cheap and reproducible.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit, note
+
+CANDIDATES = ("dryrun_single_pod.json", "dryrun_multi_pod.json")
+
+
+def render(path: str) -> None:
+    with open(path) as f:
+        rows = json.load(f)
+    note(f"\n== roofline table from {os.path.basename(path)} ==")
+    note(f"{'arch':<18} {'shape':<12} {'mesh':<8} {'tc_ms':>9} "
+         f"{'tm_ms':>10} {'tl_ms':>10} {'bound':>10} {'GiB/dev':>8} "
+         f"{'useful%':>8} {'roof%':>7}")
+    for r in rows:
+        if r.get("skipped"):
+            note(f"{r['arch']:<18} {r['shape']:<12} {r['mesh']:<8} "
+                 f"{'(skipped: ' + r['reason'][:40] + '...)'}")
+            continue
+        if r.get("error"):
+            note(f"{r['arch']:<18} {r['shape']:<12} {r['mesh']:<8} "
+                 f"ERROR {r['error'][:60]}")
+            continue
+        gib = r["bytes_per_device"]["peak_est"] / 2 ** 30
+        if r.get("proof_only") or "t_compute" not in r:
+            note(f"{r['arch']:<18} {r['shape']:<12} {r['mesh']:<8} "
+                 f"{'compile-proof':>31} {'ok':>10} {gib:>8.2f}")
+            emit(f"dryrun_{r['arch']}_{r['shape']}_{r['mesh']}",
+                 float(r.get("compile_s", 0.0)) * 1e6,
+                 f"proof_only;gib={gib:.2f}")
+            continue
+        note(f"{r['arch']:<18} {r['shape']:<12} {r['mesh']:<8} "
+             f"{r['t_compute']*1e3:>9.2f} {r['t_memory']*1e3:>10.2f} "
+             f"{r['t_collective']*1e3:>10.2f} {r['bottleneck']:>10} "
+             f"{gib:>8.2f} {r['model_flops_ratio']*100:>7.1f}% "
+             f"{r['roofline_fraction']*100:>6.2f}%")
+        emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+             max(r["t_compute"], r["t_memory"], r["t_collective"]) * 1e6,
+             f"bottleneck={r['bottleneck']};"
+             f"roof={r['roofline_fraction']:.4f};"
+             f"useful={r['model_flops_ratio']:.4f};gib={gib:.2f}")
+
+
+def main() -> None:
+    found = False
+    for cand in CANDIDATES:
+        for base in (".", os.path.dirname(os.path.dirname(__file__))):
+            path = os.path.join(base, cand)
+            if os.path.exists(path):
+                render(path)
+                found = True
+                break
+    if not found:
+        note("no dryrun*.json found — run "
+             "`python -m repro.launch.dryrun --all --out "
+             "dryrun_single_pod.json` first")
+        emit("roofline_missing", 0.0, "run_dryrun_first")
+
+
+if __name__ == "__main__":
+    main()

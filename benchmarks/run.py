@@ -1,0 +1,51 @@
+"""Benchmark entry point: one section per paper table/figure + the
+framework's own planner/SSD/Muon selection benches + the roofline reader.
+
+Prints ``name,us_per_call,derived`` CSV rows to stdout (human-readable
+tables go to stderr). REPRO_BENCH_SCALE=full runs paper-scale sizes.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (
+        experiment1,
+        experiment2,
+        experiment3,
+        kernel_profiles,
+        muon_bench,
+        planner_bench,
+        roofline,
+        ssd_bench,
+    )
+
+    sections = [
+        ("kernel_profiles (paper Fig 1)", kernel_profiles.main),
+        ("experiment1 (paper §4.1.1/§4.2.1)", experiment1.main),
+        ("experiment2 (paper §4.1.2/§4.2.2)", experiment2.main),
+        ("experiment3 (paper Tables 1-2)", experiment3.main),
+        ("planner discriminants (productized)", planner_bench.main),
+        ("ssd dual-form selection", ssd_bench.main),
+        ("muon NS association selection", muon_bench.main),
+        ("roofline (dry-run artifacts)", roofline.main),
+    ]
+    failures = 0
+    for name, fn in sections:
+        print(f"# --- {name} ---", file=sys.stderr)
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"bench_section_failed,{0.0},{name}")
+    if failures:
+        print(f"# {failures} section(s) failed", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""SSD dual-form selection: the paper's technique inside Mamba2.
+
+Times the quadratic and chunked SSD algorithms (XLA-CPU, jitted) across
+sequence lengths and reports which algorithm each discriminant selects vs
+which was actually faster — the in-model analogue of the paper's anomaly
+study.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.ssm import select_ssd_mode, ssd_chunked, ssd_quadratic
+
+from .common import FULL, emit, note, time_call
+
+
+def main():
+    rng = np.random.default_rng(0)
+    B, H, P, G, N = 1, 4, 64, 1, 64
+    chunk = 64
+    seqs = (64, 128, 256, 512, 1024) if not FULL else (
+        64, 128, 256, 512, 1024, 2048, 4096)
+    note("\n== SSD dual-form crossover (mamba2) ==")
+    note(f"{'S':>6} {'quad_ms':>9} {'chunk_ms':>9} {'faster':>9} "
+         f"{'flops-pick':>10} {'model-pick':>10}")
+    for S in seqs:
+        x = jnp.asarray(rng.standard_normal((B, S, H, P)).astype(
+            np.float32))
+        dt = jnp.asarray(rng.uniform(0.01, 0.1, (B, S, H)).astype(
+            np.float32))
+        a_log = jnp.asarray(np.log(rng.uniform(1, 8, (H,))).astype(
+            np.float32))
+        bm = jnp.asarray(rng.standard_normal((B, S, G, N)).astype(
+            np.float32))
+        cm = jnp.asarray(rng.standard_normal((B, S, G, N)).astype(
+            np.float32))
+        fq = jax.jit(lambda *a: ssd_quadratic(*a))
+        fc = jax.jit(lambda *a: ssd_chunked(*a, chunk=chunk))
+        tq = time_call(lambda: jax.block_until_ready(
+            fq(x, dt, a_log, bm, cm)))
+        tc = time_call(lambda: jax.block_until_ready(
+            fc(x, dt, a_log, bm, cm)))
+        faster = "quadratic" if tq < tc else "chunked"
+        pick_f = select_ssd_mode(S, N, P, chunk, heads=H,
+                                 discriminant="flops")
+        pick_m = select_ssd_mode(S, N, P, chunk, heads=H,
+                                 discriminant="perfmodel")
+        note(f"{S:>6} {tq*1e3:>9.2f} {tc*1e3:>9.2f} {faster:>9} "
+             f"{pick_f:>10} {pick_m:>10}")
+        emit(f"ssd_S{S}", min(tq, tc) * 1e6,
+             f"faster={faster};flops_pick={pick_f};model_pick={pick_m};"
+             f"quad_ms={tq*1e3:.2f};chunk_ms={tc*1e3:.2f}")
+
+
+if __name__ == "__main__":
+    main()

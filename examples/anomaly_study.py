@@ -1,0 +1,53 @@
+"""Mini reproduction of the paper end-to-end: Experiments 1→2→3 on AAᵀB.
+
+Random-searches for anomalies with real BLAS, traverses one region, then
+predicts anomalies from isolated kernel benchmarks and prints the
+confusion matrix — the complete §3.4 pipeline, scaled to a few minutes.
+
+Run:  PYTHONPATH=src python examples/anomaly_study.py
+"""
+
+import numpy as np
+
+from repro.core import (
+    GRAM_AATB,
+    BlasRunner,
+    experiment1_random_search,
+    experiment2_regions,
+    experiment3_predict_from_benchmarks,
+)
+
+
+def main():
+    runner = BlasRunner(reps=3)
+
+    print("Experiment 1: random search for anomalies (box [20, 500]³)...")
+    e1 = experiment1_random_search(
+        GRAM_AATB, runner, box=(20, 500), n_anomalies=6, max_samples=150,
+        threshold=0.10, seed=2, verbose=True)
+    print(f"  abundance ≈ {e1.abundance:.1%} "
+          f"({len(e1.anomalies)}/{e1.samples} samples)")
+    if not e1.anomalies:
+        print("  no anomalies in this tiny budget — rerun with a larger "
+              "max_samples")
+        return
+
+    print("\nExperiment 2: region traversal around the first anomaly...")
+    e2 = experiment2_regions(GRAM_AATB, runner, e1.anomalies[:2],
+                             box=(20, 500), threshold=0.05)
+    for scan in e2.scans[:6]:
+        print(f"  seed={scan.origin} dim=d{scan.dim}: region "
+              f"[{scan.lo}, {scan.hi}] thickness={scan.thickness}")
+
+    print("\nExperiment 3: predict anomalies from kernel benchmarks...")
+    e3 = experiment3_predict_from_benchmarks(
+        GRAM_AATB, runner, e2.classified, threshold=0.05)
+    print(e3.confusion.as_table())
+    print("\npaper's qualitative claim — anomalies are largely "
+          "predictable from per-kernel profiles — "
+          f"{'CONFIRMED' if e3.confusion.recall > 0.5 else 'NOT confirmed'}"
+          f" here (recall {e3.confusion.recall:.0%}).")
+
+
+if __name__ == "__main__":
+    main()

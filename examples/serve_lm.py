@@ -1,0 +1,60 @@
+"""Batched serving example: prefill + decode with KV caches.
+
+Loads a smoke-scale yi-9b-family model (random weights — the serving path
+is the product), runs batched greedy generation, and prints tokens/s. The
+1-token decode GEMMs are the skinny-matmul regime where kernel efficiency
+(not FLOPs) dominates — the paper's thesis at serving time.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models import api
+from repro.serve.decode import ServeState, make_serve_step
+
+
+def main():
+    cfg = get_smoke("yi_9b")
+    params, _ = api.init(jax.random.PRNGKey(0), cfg)
+    batch, max_s, new_tokens = 8, 128, 48
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (batch, 4)),
+                          jnp.int32)
+
+    caches = api.init_caches(params, cfg, batch, max_s)
+    step = jax.jit(make_serve_step(cfg, temperature=0.0))
+    state = ServeState(caches=caches, last_tokens=prompts[:, :1],
+                       rng=jax.random.PRNGKey(1))
+
+    # prefill (teacher-forced through the decode path — exact for all
+    # families including SSM)
+    for i in range(prompts.shape[1] - 1):
+        state, _ = step(state, params)
+        state = state._replace(last_tokens=prompts[:, i + 1:i + 2])
+
+    # timed decode
+    state, tok = step(state, params)   # compile + first token
+    outs = [tok]
+    t0 = time.perf_counter()
+    for _ in range(new_tokens - 1):
+        state, tok = step(state, params)
+        outs.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    gen = jnp.concatenate(outs, axis=1)
+    tps = batch * (new_tokens - 1) / dt
+    print(f"generated {gen.shape} tokens for batch={batch}")
+    print(f"decode throughput: {tps:.1f} tokens/s "
+          f"({dt/(new_tokens-1)*1e3:.1f} ms/step)")
+    print("sample:", np.asarray(gen[0][:16]))
+
+
+if __name__ == "__main__":
+    main()

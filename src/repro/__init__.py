@@ -1,0 +1,11 @@
+"""repro — a LAMP-aware multi-pod JAX training/serving framework.
+
+Reproduction + productization of "FLOPs as a Discriminant for Dense Linear
+Algebra Algorithms" (López, Karlsson, Bientinesi — ICPP'22): algorithm
+selection for linear-algebra expressions as a first-class runtime feature
+(repro.core), TPU Pallas kernels for the paper's BLAS set (repro.kernels),
+and a production substrate (models/configs/data/optim/sharding/train/serve/
+checkpoint/runtime/launch) that scales the idea to multi-pod meshes.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,7 @@
+"""Fault tolerance: sharded atomic checkpoints with mesh metadata, async
+save manager, retention, preemption hook, elastic restore."""
+
+from . import manager, store
+from .manager import CheckpointManager
+
+__all__ = ["manager", "store", "CheckpointManager"]

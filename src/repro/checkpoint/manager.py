@@ -1,0 +1,121 @@
+"""Checkpoint manager: async saves, retention, preemption hooks.
+
+Wraps :mod:`repro.checkpoint.store` with the operational behaviours a
+long-running multi-pod job needs:
+
+  * **Async save** — device arrays are fetched to host synchronously (cheap
+    relative to a step) and serialized on a background thread, so the train
+    loop resumes immediately; ``wait()`` drains before exit/restore.
+  * **Retention** — keep the newest K checkpoints (+ optional "keep every
+    N steps forever" for post-hoc evals).
+  * **Preemption** — ``install_sigterm_hook`` registers a handler that
+    requests an immediate save-and-exit at the next step boundary (the TPU
+    preemption notice pattern).
+  * **Elastic restore** — delegates to store.restore with the *current*
+    mesh; a checkpoint written on a (16,16) mesh restores cleanly onto
+    (2,16,16) or a single host.
+"""
+
+from __future__ import annotations
+
+import os
+import signal
+import threading
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from . import store
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3,
+                 keep_every: Optional[int] = None):
+        self.directory = directory
+        self.keep = keep
+        self.keep_every = keep_every
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self.preempted = threading.Event()
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- save --
+    def save(self, step: int, tree: Any, specs: Optional[Any] = None,
+             mesh=None, blocking: bool = False) -> None:
+        self.wait()
+        # Fetch to host on the caller thread (device buffers may be donated
+        # right after); serialization happens in the background.
+        host_tree = jax.tree.map(
+            lambda x: None if x is None else jax.device_get(x), tree,
+            is_leaf=lambda x: x is None)
+        mesh_shape = (
+            {k: int(v) for k, v in mesh.shape.items()} if mesh else None)
+
+        def work():
+            try:
+                store.save(self.directory, step, host_tree, specs=specs,
+                           mesh_shape=mesh_shape)
+                self._retain(step)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        if blocking:
+            work()
+            self._raise_if_failed()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def _retain(self, just_saved: int) -> None:
+        if self.keep_every:
+            # never delete multiples of keep_every
+            kept = [s for s in self._steps() if s % self.keep_every == 0]
+        else:
+            kept = []
+        steps = [s for s in self._steps() if s not in kept]
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            import shutil
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
+                          ignore_errors=True)
+
+    def _steps(self):
+        out = []
+        for d in os.listdir(self.directory):
+            m = store._STEP_RE.match(d)
+            if m and os.path.exists(
+                    os.path.join(self.directory, d, store.MANIFEST)):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._raise_if_failed()
+
+    def _raise_if_failed(self):
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise RuntimeError("async checkpoint save failed") from e
+
+    # ---------------------------------------------------------- restore --
+    def latest_step(self) -> Optional[int]:
+        return store.latest_step(self.directory)
+
+    def restore(self, like: Any, step: Optional[int] = None, mesh=None,
+                specs: Optional[Any] = None) -> Any:
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(
+                f"no complete checkpoint under {self.directory}")
+        return store.restore(self.directory, step, like, mesh=mesh,
+                             specs=specs)
+
+    # ------------------------------------------------------- preemption --
+    def install_sigterm_hook(self) -> None:
+        def handler(signum, frame):
+            self.preempted.set()
+        signal.signal(signal.SIGTERM, handler)

@@ -1,0 +1,19 @@
+"""Assigned-architecture configs (exact published hyperparameters) +
+reduced smoke variants + shape-cell definitions."""
+
+from .base import (
+    ALIASES,
+    ARCH_IDS,
+    SHAPES,
+    ShapeSpec,
+    all_cells,
+    get,
+    get_smoke,
+    normalize,
+    shape_applicable,
+)
+
+__all__ = [
+    "ALIASES", "ARCH_IDS", "SHAPES", "ShapeSpec", "all_cells", "get",
+    "get_smoke", "normalize", "shape_applicable",
+]

@@ -1,0 +1,54 @@
+"""repro.core — the paper's contribution: the LAMP planner.
+
+*FLOPs as a Discriminant for Dense Linear Algebra Algorithms*
+(López, Karlsson, Bientinesi — ICPP '22) productized:
+
+expression IR → algorithm enumeration → {flops | perfmodel | measured}
+discriminant → executable plan, plus the paper's anomaly-study harnesses
+(Experiments 1–3).
+"""
+
+from .algorithms import (
+    Algorithm,
+    enumerate_algorithms,
+    optimal_chain_order,
+)
+from .anomaly import Classification, ConfusionMatrix, classify, scan_line
+from .expr import Chain, Matrix, Transpose, chain, gram_times, matrix_chain
+from .experiments import (
+    GRAM_AATB,
+    MATRIX_CHAIN_ABCD,
+    ExpressionSpec,
+    experiment1_random_search,
+    experiment2_regions,
+    experiment3_predict_from_benchmarks,
+    measure_instance,
+)
+from .flops import KernelCall, gemm, kernel_flops, symm, syrk, total_flops, tri2full
+from .perfmodel import (
+    TPU_V5E,
+    AnalyticalTPUProfile,
+    HardwareSpec,
+    KernelProfile,
+    TableProfile,
+    predict_algorithm_time,
+)
+from .planner import Plan, Planner, default_planner, plan
+from .runners import BlasRunner, JaxRunner
+from .selector import DISCRIMINANTS, select
+
+__all__ = [
+    "Algorithm", "enumerate_algorithms", "optimal_chain_order",
+    "Classification", "ConfusionMatrix", "classify", "scan_line",
+    "Chain", "Matrix", "Transpose", "chain", "gram_times", "matrix_chain",
+    "GRAM_AATB", "MATRIX_CHAIN_ABCD", "ExpressionSpec",
+    "experiment1_random_search", "experiment2_regions",
+    "experiment3_predict_from_benchmarks", "measure_instance",
+    "KernelCall", "gemm", "kernel_flops", "symm", "syrk", "total_flops",
+    "tri2full",
+    "TPU_V5E", "AnalyticalTPUProfile", "HardwareSpec", "KernelProfile",
+    "TableProfile", "predict_algorithm_time",
+    "Plan", "Planner", "default_planner", "plan",
+    "BlasRunner", "JaxRunner",
+    "DISCRIMINANTS", "select",
+]

@@ -1,0 +1,305 @@
+"""Algorithm enumeration for linear algebra expressions.
+
+An *algorithm* (paper §3.2) is a sequence of kernel calls that evaluates an
+expression. Two sources of multiplicity:
+
+1. **Multiplication order** — the chain ``A@B@C@D`` can reduce any adjacent
+   pair at each step: (n-1)! orderings for an n-operand chain (the paper's
+   3! = 6 for ``ABCD``). Note this is *orderings*, not parenthesizations:
+   ``(AB)(CD)`` computed AB-first and CD-first are distinct algorithms
+   (paper's Algorithms 2 and 5) because inter-kernel cache effects differ.
+2. **Kernel choice** — a Gram pair ``A·Aᵀ`` may use SYRK (triangle output) or
+   GEMM; a symmetric operand may use SYMM or GEMM; a triangle-stored operand
+   used by GEMM needs a TRI2FULL copy first (paper's Algorithm 2 for
+   ``AAᵀB``).
+
+The enumeration reproduces the paper's sets exactly: 6 algorithms for
+``ABCD`` and 5 for ``AAᵀB`` (SYRK+SYMM, SYRK+TRI2FULL+GEMM, GEMM+SYMM,
+GEMM+GEMM, GEMM(AᵀB)+GEMM).
+
+For long chains full enumeration explodes as (n-1)!·kernel-choices, so
+:func:`enumerate_algorithms` takes a cap, and :func:`optimal_chain_order`
+provides the classic O(n³) dynamic program over parenthesizations for the
+FLOPs-only discriminant (what Linnea/Julia do).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+from .expr import Chain, Matrix, Operand, Transpose, bind_dims, is_gram_pair
+from .flops import KernelCall, gemm, symm, syrk, total_flops, tri2full
+
+
+@dataclasses.dataclass(frozen=True)
+class Leaf:
+    """Reference to an input operand.
+
+    ``index`` — position in the chain; ``base`` — position of the first
+    chain operand backed by the same underlying Matrix (a Gram pair's
+    ``A`` and ``Aᵀ`` share a base, so executors materialize ONE array);
+    ``transposed`` — whether this occurrence is the transposed view.
+    """
+
+    index: int
+    base: int
+    transposed: bool
+    rows: int
+    cols: int
+    symmetric: bool = False
+    storage: str = "full"
+
+
+@dataclasses.dataclass(frozen=True)
+class Step:
+    """One kernel call producing intermediate ``out``.
+
+    ``lhs``/``rhs`` reference either a Leaf or a previous Step's ``out`` id
+    (int). ``call`` carries kind+dims+flops. For ``tri2full`` only ``lhs`` is
+    used.
+    """
+
+    call: KernelCall
+    lhs: object  # Leaf | int
+    rhs: object  # Leaf | int | None
+    out: int
+    out_rows: int
+    out_cols: int
+    out_storage: str  # 'full' | 'tri'
+    out_symmetric: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class Algorithm:
+    """A complete kernel-call sequence evaluating the expression."""
+
+    name: str
+    steps: Tuple[Step, ...]
+
+    @property
+    def calls(self) -> Tuple[KernelCall, ...]:
+        return tuple(s.call for s in self.steps)
+
+    @property
+    def flops(self) -> int:
+        return total_flops(self.calls)
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"{self.name}: " + "; ".join(repr(c) for c in self.calls)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Node:
+    """Enumeration-time operand: either a leaf or an intermediate."""
+
+    ref: object  # Leaf | int (step out id)
+    rows: int
+    cols: int
+    symmetric: bool
+    storage: str  # 'full' | 'tri'
+
+
+def _leaf_nodes(c: Chain, dims: Sequence[int]) -> List[_Node]:
+    nodes = []
+    seen: Dict[int, int] = {}
+    for i, op in enumerate(c.ops):
+        r, co = dims[i], dims[i + 1]
+        mat = op.operand if isinstance(op, Transpose) else op
+        base = seen.setdefault(id(mat), i)
+        leaf = Leaf(index=i, base=base,
+                    transposed=isinstance(op, Transpose), rows=r, cols=co,
+                    symmetric=op.symmetric)
+        nodes.append(_Node(ref=leaf, rows=r, cols=co,
+                           symmetric=leaf.symmetric, storage="full"))
+    return nodes
+
+
+def _same_leaf_gram(c: Chain, i: int) -> bool:
+    """Is ops[i] @ ops[i+1] a Gram pair A·Aᵀ or Aᵀ·A of the same leaf?"""
+    return is_gram_pair(c.ops[i], c.ops[i + 1])
+
+
+def _pair_kernels(
+    lhs: _Node, rhs: _Node, gram: bool
+) -> Iterator[Tuple[str, Tuple[KernelCall, ...], str, bool]]:
+    """Yield (tag, calls, out_storage, out_symmetric) choices for lhs@rhs.
+
+    ``calls`` may include a tri2full preceding the product kernel.
+    """
+    m, k, n = lhs.rows, lhs.cols, rhs.cols
+
+    if gram and lhs.storage == "full" and rhs.storage == "full":
+        # SYRK: one triangle of the (symmetric) product.
+        yield "syrk", (syrk(m, k),), "tri", True
+        # GEMM computing the full symmetric product.
+        yield "gemm", (gemm(m, n, k),), "full", True
+        return
+
+    pre: Tuple[KernelCall, ...]
+
+    # Left operand symmetric → SYMM(side=L) without materializing storage.
+    if lhs.symmetric and lhs.rows == lhs.cols:
+        yield "symm", (symm(m, n),), "full", False
+        if lhs.storage == "tri":
+            # tri2full then plain GEMM (paper's Algorithm 2 for AAᵀB).
+            yield "tri2full+gemm", (tri2full(m), gemm(m, n, k)), "full", False
+        else:
+            yield "gemm", (gemm(m, n, k),), "full", False
+        return
+
+    # Right operand symmetric → SYMM(side=R).
+    if rhs.symmetric and rhs.rows == rhs.cols:
+        yield "symmR", (symm(n, m),), "full", False
+        if rhs.storage == "tri":
+            yield "tri2full+gemm", (tri2full(n), gemm(m, n, k)), "full", False
+        else:
+            yield "gemm", (gemm(m, n, k),), "full", False
+        return
+
+    # Plain product.
+    yield "gemm", (gemm(m, n, k),), "full", False
+
+
+def enumerate_algorithms(
+    c: Chain,
+    env: Optional[Dict[str, int]] = None,
+    max_algorithms: int = 512,
+) -> List[Algorithm]:
+    """Enumerate all kernel-call sequences evaluating chain ``c``.
+
+    Reproduces the paper's algorithm sets: 6 for 4-operand chains, 5 for
+    ``AAᵀB``. Enumeration is exhaustive in (ordering × kernel choice) up to
+    ``max_algorithms``.
+    """
+    dims = bind_dims(c, env or {})
+    leaves = _leaf_nodes(c, dims)
+    gram_flags = [_same_leaf_gram(c, i) for i in range(len(c.ops) - 1)]
+
+    out: List[Algorithm] = []
+    counter = itertools.count()
+
+    def rec(nodes: List[_Node], grams: List[bool], steps: Tuple[Step, ...],
+            tags: Tuple[str, ...]) -> None:
+        if len(out) >= max_algorithms:
+            return
+        if len(nodes) == 1:
+            final = nodes[0]
+            steps_f = steps
+            if final.storage == "tri":
+                # Result must be materialized as a full matrix.
+                sid = next(counter)
+                call = tri2full(final.rows)
+                steps_f = steps + (
+                    Step(call=call, lhs=final.ref, rhs=None, out=sid,
+                         out_rows=final.rows, out_cols=final.cols,
+                         out_storage="full", out_symmetric=final.symmetric),
+                )
+                tags = tags + ("tri2full",)
+            out.append(Algorithm(name="+".join(tags), steps=steps_f))
+            return
+        for i in range(len(nodes) - 1):
+            lhs, rhs = nodes[i], nodes[i + 1]
+            for tag, calls, ostore, osym in _pair_kernels(lhs, rhs, grams[i]):
+                new_steps = list(steps)
+                new_tags = tags + (tag,)
+                lref, rref = lhs.ref, rhs.ref
+                # tri2full pre-call rewrites the tri operand in place.
+                if len(calls) == 2:
+                    pre, prod = calls
+                    sid = next(counter)
+                    tri_on_left = lhs.storage == "tri"
+                    src = lref if tri_on_left else rref
+                    rows = lhs.rows if tri_on_left else rhs.rows
+                    new_steps.append(
+                        Step(call=pre, lhs=src, rhs=None, out=sid,
+                             out_rows=rows, out_cols=rows,
+                             out_storage="full", out_symmetric=True))
+                    if tri_on_left:
+                        lref = sid
+                    else:
+                        rref = sid
+                    calls = (prod,)
+                (prod,) = calls
+                oid = next(counter)
+                new_steps.append(
+                    Step(call=prod, lhs=lref, rhs=rref, out=oid,
+                         out_rows=lhs.rows, out_cols=rhs.cols,
+                         out_storage=ostore, out_symmetric=osym))
+                merged = _Node(ref=oid, rows=lhs.rows, cols=rhs.cols,
+                               symmetric=osym, storage=ostore)
+                new_nodes = nodes[:i] + [merged] + nodes[i + 2:]
+                # Rebuild pair flags positionally: pairs touching the merged
+                # node are never Gram pairs; pairs right of the merge shift.
+                new_grams = []
+                for j in range(len(new_nodes) - 1):
+                    if j < i - 1:
+                        new_grams.append(grams[j])
+                    elif j in (i - 1, i):
+                        new_grams.append(False)
+                    else:
+                        new_grams.append(grams[j + 1])
+                rec(new_nodes, new_grams, tuple(new_steps), new_tags)
+
+    rec(leaves, gram_flags, (), ())
+    # Dedup identical call sequences reached via different search paths.
+    seen = {}
+    for a in out:
+        key = (a.calls, tuple((s.lhs, s.rhs) for s in a.steps))
+        if key not in seen:
+            seen[key] = a
+    algos = list(seen.values())
+    # Stable, human-auditable naming: ordinal + tags.
+    return [
+        Algorithm(name=f"alg{i + 1}[{a.name}]", steps=a.steps)
+        for i, a in enumerate(algos)
+    ]
+
+
+def optimal_chain_order(dims: Sequence[int]) -> Tuple[int, Tuple]:
+    """Classic matrix-chain DP: min-FLOPs parenthesization.
+
+    Returns (flops, tree) where tree is a nested tuple of operand indices.
+    This is the FLOPs-only discriminant used by Linnea/Julia/Armadillo, i.e.
+    the strategy whose reliability the paper interrogates. O(n³).
+    """
+    n = len(dims) - 1
+    if n < 1:
+        raise ValueError("empty chain")
+    INF = float("inf")
+    cost = [[0] * n for _ in range(n)]
+    split = [[0] * n for _ in range(n)]
+    for span in range(1, n):
+        for i in range(n - span):
+            j = i + span
+            best, arg = INF, i
+            for k in range(i, j):
+                c = (cost[i][k] + cost[k + 1][j]
+                     + 2 * dims[i] * dims[k + 1] * dims[j + 1])
+                if c < best:
+                    best, arg = c, k
+            cost[i][j] = int(best)
+            split[i][j] = arg
+
+    def tree(i: int, j: int):
+        if i == j:
+            return i
+        k = split[i][j]
+        return (tree(i, k), tree(k + 1, j))
+
+    return cost[0][n - 1], tree(0, n - 1)
+
+
+def chain_flops_of_order(dims: Sequence[int], order: Sequence[int]) -> int:
+    """FLOPs of reducing adjacent pairs in the given order.
+
+    ``order`` lists, per step, the index of the left operand of the pair to
+    merge, with indices referring to the *current* working list.
+    """
+    ds = list(dims)
+    fl = 0
+    for i in order:
+        fl += 2 * ds[i] * ds[i + 1] * ds[i + 2]
+        del ds[i + 1]
+    return fl

@@ -1,0 +1,175 @@
+"""Anomaly classification and severity scores (paper §3.3).
+
+An instance is an *anomaly* when the set of FLOP-cheapest algorithms and the
+set of fastest algorithms are disjoint — i.e. minimising FLOPs (the
+Linnea/Julia/Armadillo strategy) picks a non-fastest algorithm — and the
+time score exceeds a threshold (paper uses 10 % for Experiment 1, 5 % for
+Experiments 2–3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Classification:
+    is_anomaly: bool
+    time_score: float   # (T_cheapest − T_fastest) / T_cheapest ∈ [0, 1)
+    flop_score: float   # (F_fastest − F_cheapest) / F_fastest ∈ [0, 1)
+    cheapest: Tuple[str, ...]
+    fastest: Tuple[str, ...]
+
+
+def classify(
+    times: Dict[str, float],
+    flops: Dict[str, int],
+    threshold: float = 0.10,
+    rel_tol: float = 1e-9,
+) -> Classification:
+    """Classify one instance given per-algorithm times and FLOP counts.
+
+    ``times``/``flops`` are keyed by algorithm name. Ties in FLOPs (paper's
+    Algs 1/2 and 3/4 for AAᵀB, 2/5 for ABCD) put multiple algorithms in the
+    cheapest set; ties in time are resolved with ``rel_tol``.
+    """
+    if set(times) != set(flops):
+        raise ValueError("times and flops must cover the same algorithms")
+    f_min = min(flops.values())
+    cheapest = tuple(sorted(a for a, f in flops.items() if f == f_min))
+    t_min = min(times.values())
+    fastest = tuple(sorted(
+        a for a, t in times.items() if t <= t_min * (1 + rel_tol)))
+
+    t_cheapest = min(times[a] for a in cheapest)
+    time_score = max(0.0, (t_cheapest - t_min) / t_cheapest) \
+        if t_cheapest > 0 else 0.0
+
+    # F_fastest: FLOP count of the cheapest among the fastest algorithms.
+    f_fastest = min(flops[a] for a in fastest)
+    flop_score = max(0.0, (f_fastest - f_min) / f_fastest) \
+        if f_fastest > 0 else 0.0
+
+    disjoint = not (set(cheapest) & set(fastest))
+    return Classification(
+        is_anomaly=bool(disjoint and time_score > threshold),
+        time_score=float(time_score),
+        flop_score=float(flop_score),
+        cheapest=cheapest,
+        fastest=fastest,
+    )
+
+
+@dataclasses.dataclass
+class RegionScan:
+    """Result of traversing one axis-aligned line (paper Experiment 2)."""
+
+    dim: int                     # which dimension was traversed
+    origin: Tuple[int, ...]      # the seed anomaly instance
+    points: List[Tuple[int, bool, float, float]]  # (coord, is_anom, ts, fs)
+    lo: int                      # region boundary (inclusive) low coord
+    hi: int                      # region boundary (inclusive) high coord
+
+    @property
+    def thickness(self) -> int:
+        # Paper: b − a − 1 with a,b the first non-anomalous boundary points;
+        # with inclusive anomalous endpoints lo/hi this is hi − lo + 1.
+        return self.hi - self.lo + 1
+
+
+def scan_line(
+    classify_at,
+    origin: Sequence[int],
+    dim: int,
+    lo_bound: int,
+    hi_bound: int,
+    step: int = 10,
+    hole_tolerance: int = 2,
+) -> RegionScan:
+    """Traverse an axis-aligned line through an anomaly (paper §3.4.2).
+
+    ``classify_at(point) -> Classification``. The traversal walks both
+    directions from ``origin`` in ``step`` strides; 1–2 consecutive
+    non-anomalies are holes; ≥3 mark the region boundary.
+    """
+    origin = tuple(int(x) for x in origin)
+    points: Dict[int, Classification] = {}
+
+    def probe(coord: int) -> Classification:
+        if coord not in points:
+            p = list(origin)
+            p[dim] = coord
+            points[coord] = classify_at(tuple(p))
+        return points[coord]
+
+    def walk(direction: int) -> int:
+        """Return the last anomalous coordinate in this direction."""
+        last_anom = origin[dim]
+        misses = 0
+        coord = origin[dim]
+        while True:
+            coord += direction * step
+            if coord < lo_bound or coord > hi_bound:
+                break
+            c = probe(coord)
+            if c.is_anomaly:
+                last_anom = coord
+                misses = 0
+            else:
+                misses += 1
+                if misses > hole_tolerance:
+                    break
+        return last_anom
+
+    probe(origin[dim])
+    hi = walk(+1)
+    lo = walk(-1)
+    pts = sorted(
+        (coord, c.is_anomaly, c.time_score, c.flop_score)
+        for coord, c in points.items()
+    )
+    return RegionScan(dim=dim, origin=origin, points=pts, lo=lo, hi=hi)
+
+
+@dataclasses.dataclass
+class ConfusionMatrix:
+    """Experiment 3 output: measured (actual) vs profile-predicted."""
+
+    tp: int = 0
+    fp: int = 0
+    fn: int = 0
+    tn: int = 0
+
+    def add(self, actual: bool, predicted: bool) -> None:
+        if actual and predicted:
+            self.tp += 1
+        elif actual and not predicted:
+            self.fn += 1
+        elif not actual and predicted:
+            self.fp += 1
+        else:
+            self.tn += 1
+
+    @property
+    def recall(self) -> float:   # paper: "92 % of anomalies predicted"
+        d = self.tp + self.fn
+        return self.tp / d if d else 0.0
+
+    @property
+    def precision(self) -> float:  # paper: "96 % of predicted were actual"
+        d = self.tp + self.fp
+        return self.tp / d if d else 0.0
+
+    @property
+    def total(self) -> int:
+        return self.tp + self.fp + self.fn + self.tn
+
+    def as_table(self) -> str:
+        return (
+            "            Predicted\n"
+            "             No      Yes\n"
+            f"Actual No   {self.tn:<8d}{self.fp:<8d}\n"
+            f"       Yes  {self.fn:<8d}{self.tp:<8d}\n"
+            f"recall={self.recall:.1%} precision={self.precision:.1%}"
+        )

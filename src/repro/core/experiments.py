@@ -1,0 +1,196 @@
+"""The paper's three experiments (§3.4), as reusable harnesses.
+
+* Experiment 1 — random search over an instance box: abundance + severity.
+* Experiment 2 — axis-aligned line traversal around found anomalies: region
+  thickness per dimension.
+* Experiment 3 — predict anomalies from *isolated* kernel benchmarks
+  (additive model), confusion matrix vs measured ground truth.
+
+Each harness takes an ``ExpressionSpec`` (how to build the chain for an
+instance tuple) and a :class:`~repro.core.runners.BlasRunner`, so the same
+code reproduces both paper expressions and extends to new ones.
+
+Scaled-down defaults: the paper used boxes up to 1200 with 10–23k samples on
+a 10-core Xeon with MKL; the benchmarks here default to smaller boxes and
+sample counts to finish in CI time, with flags to run the full study.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .algorithms import Algorithm, enumerate_algorithms
+from .anomaly import Classification, ConfusionMatrix, RegionScan, classify, scan_line
+from .expr import Chain, gram_times, matrix_chain
+from .perfmodel import TableProfile, predict_algorithm_time
+from .runners import BlasRunner
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpressionSpec:
+    """A family of instances: tuple of dims -> Chain."""
+
+    name: str
+    ndims: int
+    build: Callable[[Sequence[int]], Chain]
+
+    def algorithms(self, point: Sequence[int]) -> List[Algorithm]:
+        return enumerate_algorithms(self.build(tuple(int(x) for x in point)))
+
+
+MATRIX_CHAIN_ABCD = ExpressionSpec(
+    name="ABCD", ndims=5, build=lambda d: matrix_chain(*d))
+
+GRAM_AATB = ExpressionSpec(
+    name="AATB", ndims=3, build=lambda d: gram_times(*d))
+
+
+@dataclasses.dataclass
+class Instance:
+    point: Tuple[int, ...]
+    times: Dict[str, float]
+    flops: Dict[str, int]
+    cls: Classification
+
+
+def measure_instance(
+    spec: ExpressionSpec,
+    point: Sequence[int],
+    runner: BlasRunner,
+    threshold: float = 0.10,
+) -> Instance:
+    """Time every algorithm for one instance and classify it."""
+    algos = spec.algorithms(point)
+    times: Dict[str, float] = {}
+    flops: Dict[str, int] = {}
+    operands = runner.make_operands(algos[-1])  # leaves shared across algos
+    for a in algos:
+        # ensure operand dict covers this algorithm's leaves too
+        for k, v in runner.make_operands(a).items():
+            operands.setdefault(k, v)
+        times[a.name] = runner.time_algorithm(a, operands)
+        flops[a.name] = a.flops
+    cls = classify(times, flops, threshold=threshold)
+    return Instance(tuple(int(x) for x in point), times, flops, cls)
+
+
+@dataclasses.dataclass
+class Experiment1Result:
+    spec_name: str
+    samples: int
+    anomalies: List[Instance]
+    wall_s: float
+
+    @property
+    def abundance(self) -> float:
+        return len(self.anomalies) / self.samples if self.samples else 0.0
+
+
+def experiment1_random_search(
+    spec: ExpressionSpec,
+    runner: BlasRunner,
+    box: Tuple[int, int] = (20, 1200),
+    n_anomalies: int = 20,
+    max_samples: int = 2000,
+    threshold: float = 0.10,
+    seed: int = 0,
+    verbose: bool = False,
+) -> Experiment1Result:
+    """Paper §3.4.1: sample instances u.a.r. until n anomalies are found."""
+    rng = np.random.default_rng(seed)
+    found: List[Instance] = []
+    t0 = _time.perf_counter()
+    samples = 0
+    while len(found) < n_anomalies and samples < max_samples:
+        point = tuple(int(x) for x in
+                      rng.integers(box[0], box[1] + 1, size=spec.ndims))
+        inst = measure_instance(spec, point, runner, threshold)
+        samples += 1
+        if inst.cls.is_anomaly:
+            found.append(inst)
+            if verbose:
+                print(f"  anomaly #{len(found)} at {point} "
+                      f"ts={inst.cls.time_score:.1%} "
+                      f"fs={inst.cls.flop_score:.1%}")
+    return Experiment1Result(spec.name, samples, found,
+                             _time.perf_counter() - t0)
+
+
+@dataclasses.dataclass
+class Experiment2Result:
+    spec_name: str
+    scans: List[RegionScan]
+    # All classified points, reusable by Experiment 3:
+    classified: Dict[Tuple[int, ...], Instance]
+
+
+def experiment2_regions(
+    spec: ExpressionSpec,
+    runner: BlasRunner,
+    anomalies: Sequence[Instance],
+    box: Tuple[int, int] = (20, 1200),
+    step: int = 10,
+    threshold: float = 0.05,
+) -> Experiment2Result:
+    """Paper §3.4.2: intersect regions with axis-aligned lines."""
+    classified: Dict[Tuple[int, ...], Instance] = {}
+
+    def classify_at_factory(origin: Tuple[int, ...], dim: int):
+        def classify_at(point: Tuple[int, ...]) -> Classification:
+            if point not in classified:
+                classified[point] = measure_instance(
+                    spec, point, runner, threshold)
+            return classified[point].cls
+        return classify_at
+
+    scans: List[RegionScan] = []
+    for inst in anomalies:
+        for dim in range(spec.ndims):
+            scans.append(scan_line(
+                classify_at_factory(inst.point, dim),
+                inst.point, dim, box[0], box[1], step=step))
+    return Experiment2Result(spec.name, scans, classified)
+
+
+@dataclasses.dataclass
+class Experiment3Result:
+    spec_name: str
+    confusion: ConfusionMatrix
+    profile: TableProfile
+
+
+def experiment3_predict_from_benchmarks(
+    spec: ExpressionSpec,
+    runner: BlasRunner,
+    classified: Dict[Tuple[int, ...], Instance],
+    threshold: float = 0.05,
+    peak_flops: float = 1e11,
+) -> Experiment3Result:
+    """Paper §3.4.3: benchmark each distinct kernel call in isolation, then
+    predict each instance's fastest/cheapest sets from the additive model and
+    compare against measured ground truth."""
+    profile = TableProfile(peak_flops=peak_flops)
+    cm = ConfusionMatrix()
+
+    # 1. Collect + benchmark every distinct call across all instances.
+    for point in classified:
+        for a in spec.algorithms(point):
+            for call in a.calls:
+                if call not in profile:
+                    profile.record(call, runner.benchmark_call(call))
+
+    # 2. Predict per instance; compare with measured classification.
+    for point, inst in classified.items():
+        algos = spec.algorithms(point)
+        pred_times = {a.name: predict_algorithm_time(a.calls, profile)
+                      for a in algos}
+        flops = {a.name: a.flops for a in algos}
+        predicted = classify(pred_times, flops, threshold=threshold)
+        actual = classify(inst.times, flops, threshold=threshold)
+        cm.add(actual.is_anomaly, predicted.is_anomaly)
+
+    return Experiment3Result(spec.name, cm, profile)

@@ -1,0 +1,113 @@
+"""The LAMP planner: expression → selected algorithm → JAX callable.
+
+This is the paper's contribution as a *runtime feature*: model code hands a
+linear-algebra expression (chain, Gram product) plus concrete sizes to
+:func:`plan`, and gets back a jit-able callable implementing the algorithm
+chosen by the configured discriminant. Plans are memoised per
+(expression-structure, sizes, discriminant, profile) so that planning cost
+is paid once per shape — the common case in training where shapes are
+static across steps.
+
+The planner is consumed by:
+  * ``repro.optim.muon``   — Gram-product chains (the paper's AAᵀB);
+  * ``repro.models.ssm``   — SSD quadratic-vs-chunked dual selection;
+  * ``repro.serve.decode`` — decode-step projection chains (1-token GEMMs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Dict, Optional, Tuple
+
+from .algorithms import Algorithm, enumerate_algorithms
+from .expr import Chain, bind_dims
+from .perfmodel import AnalyticalTPUProfile, KernelProfile
+from .runners import JaxRunner
+from .selector import select
+
+
+@dataclasses.dataclass
+class Plan:
+    algorithm: Algorithm
+    fn: Callable            # jax callable: (*leaf_arrays) -> result
+    ranked: Tuple[str, ...]  # algorithm names, best first (for logging)
+    discriminant: str
+
+    @property
+    def flops(self) -> int:
+        return self.algorithm.flops
+
+
+class Planner:
+    """Thread-safe, memoising planner."""
+
+    def __init__(
+        self,
+        discriminant: str = "perfmodel",
+        profile: Optional[KernelProfile] = None,
+        use_pallas: bool = False,
+        dtype_bytes: int = 2,
+    ):
+        self.discriminant = discriminant
+        self.profile = profile or AnalyticalTPUProfile()
+        self.runner = JaxRunner(use_pallas=use_pallas)
+        self.dtype_bytes = dtype_bytes
+        self._cache: Dict[Tuple, Plan] = {}
+        self._lock = threading.Lock()
+
+    def _key(self, c: Chain, env) -> Tuple:
+        dims = bind_dims(c, env or {})
+        struct = tuple(
+            (type(op).__name__, getattr(op, "symmetric", False))
+            for op in c.ops
+        )
+        return (struct, dims, self.discriminant)
+
+    def plan(self, c: Chain, env: Optional[Dict[str, int]] = None) -> Plan:
+        key = self._key(c, env)
+        with self._lock:
+            hit = self._cache.get(key)
+        if hit is not None:
+            return hit
+        algos = enumerate_algorithms(c, env)
+        ranked = select(algos, self.discriminant, profile=self.profile,
+                        dtype_bytes=self.dtype_bytes)
+        best = ranked[0]
+        plan = Plan(
+            algorithm=best,
+            fn=self.runner.build(best),
+            ranked=tuple(a.name for a in ranked),
+            discriminant=self.discriminant,
+        )
+        with self._lock:
+            self._cache[key] = plan
+        return plan
+
+    def __call__(self, c: Chain, *arrays, env=None):
+        """Plan and evaluate in one call (arrays follow chain leaf order,
+        with Gram-pair leaves deduplicated: pass each distinct matrix once
+        per its first occurrence index)."""
+        plan = self.plan(c, env)
+        return plan.fn(*arrays)
+
+
+_default_planner: Optional[Planner] = None
+_default_lock = threading.Lock()
+
+
+def default_planner() -> Planner:
+    global _default_planner
+    with _default_lock:
+        if _default_planner is None:
+            _default_planner = Planner()
+        return _default_planner
+
+
+def plan(c: Chain, env: Optional[Dict[str, int]] = None,
+         discriminant: str = "perfmodel") -> Plan:
+    """Module-level convenience using a per-discriminant default planner."""
+    p = default_planner()
+    if discriminant != p.discriminant:
+        p = Planner(discriminant=discriminant)
+    return p.plan(c, env)

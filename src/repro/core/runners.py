@@ -1,0 +1,240 @@
+"""Algorithm executors + timers.
+
+Two backends:
+
+* :class:`BlasRunner` — executes algorithms through *actual BLAS* kernels
+  (``scipy.linalg.blas`` dgemm/dsyrk/dsymm), matching the paper's
+  methodology: double precision, median-of-k timing, cache flush between
+  repetitions. This is what the paper-reproduction experiments
+  (benchmarks/experiment*.py) measure.
+* :class:`JaxRunner` — builds a jit-able JAX callable for an algorithm, used
+  where the planner is embedded in model code (Muon, SSD). On TPU the gemm/
+  syrk/symm steps lower to the Pallas kernels in :mod:`repro.kernels`.
+
+The executor walks :class:`~repro.core.algorithms.Algorithm` steps; operand
+leaves reference the chain's input matrices, transposition handled at leaf
+fetch (BLAS ``trans`` flags / ``jnp.swapaxes``).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .algorithms import Algorithm, Leaf, Step
+from .flops import KernelCall
+
+try:  # scipy is available in this container; keep import soft for docs envs
+    from scipy.linalg import blas as _blas
+except Exception:  # pragma: no cover
+    _blas = None
+
+
+# ------------------------------------------------------------------ BLAS ---
+
+_FLUSH_BYTES = 64 * 1024 * 1024  # > L3 on the container host
+
+
+class CacheFlusher:
+    """Paper §3.4: flush the cache prior to each repetition."""
+
+    def __init__(self, nbytes: int = _FLUSH_BYTES):
+        self._buf = np.zeros(nbytes // 8, dtype=np.float64)
+
+    def flush(self) -> None:
+        # Touch every cache line; the sum defeats dead-code elimination.
+        self._buf += 1.0
+        _ = float(self._buf[:: 4096].sum())
+
+
+def _blas_step(step: Step, fetch: Callable[[object], np.ndarray]) -> np.ndarray:
+    """Execute one kernel call with scipy BLAS (float64, Fortran order)."""
+    call = step.call
+    if call.kind == "gemm":
+        a = fetch(step.lhs)
+        b = fetch(step.rhs)
+        return _blas.dgemm(1.0, a, b)
+    if call.kind == "syrk":
+        a = fetch(step.lhs)
+        # dsyrk computes one triangle of a·aᵀ (lower, given lower=1).
+        return _blas.dsyrk(1.0, a, lower=1)
+    if call.kind == "symm":
+        s = fetch(step.lhs)
+        b = fetch(step.rhs)
+        return _blas.dsymm(1.0, s, b, side=0, lower=1)
+    if call.kind == "tri2full":
+        t = fetch(step.lhs)
+        return np.asfortranarray(
+            np.tril(t) + np.tril(t, -1).T
+        )
+    raise ValueError(call.kind)
+
+
+class BlasRunner:
+    """Execute/time algorithms with real BLAS kernels (paper methodology)."""
+
+    def __init__(self, reps: int = 10, flush_cache: bool = True,
+                 rng: Optional[np.random.Generator] = None):
+        if _blas is None:  # pragma: no cover
+            raise RuntimeError("scipy BLAS unavailable")
+        self.reps = reps
+        self.flusher = CacheFlusher() if flush_cache else None
+        self.rng = rng or np.random.default_rng(0)
+
+    # -- operand synthesis ------------------------------------------------
+    def make_operands(self, alg: Algorithm) -> Dict[int, np.ndarray]:
+        """Fresh random inputs for every distinct leaf index of ``alg``.
+
+        Leaves are stored untransposed; transposition applied at fetch.
+        """
+        ops: Dict[int, np.ndarray] = {}
+        for step in alg.steps:
+            for ref in (step.lhs, step.rhs):
+                if isinstance(ref, Leaf) and ref.base not in ops:
+                    # Underlying (untransposed) matrix shape.
+                    r, c = (ref.cols, ref.rows) if ref.transposed else (
+                        ref.rows, ref.cols)
+                    ops[ref.base] = np.asfortranarray(
+                        self.rng.standard_normal((r, c)))
+        return ops
+
+    def _fetcher(self, operands: Dict[int, np.ndarray],
+                 inter: Dict[int, np.ndarray]) -> Callable:
+        def fetch(ref):
+            if isinstance(ref, Leaf):
+                a = operands[ref.base]
+                return a.T if ref.transposed else a
+            return inter[ref]
+        return fetch
+
+    def execute(self, alg: Algorithm,
+                operands: Dict[int, np.ndarray]) -> np.ndarray:
+        inter: Dict[int, np.ndarray] = {}
+        out = None
+        fetch = self._fetcher(operands, inter)
+        for step in alg.steps:
+            out = _blas_step(step, fetch)
+            inter[step.out] = out
+        return out
+
+    def time_algorithm(self, alg: Algorithm,
+                       operands: Optional[Dict[int, np.ndarray]] = None
+                       ) -> float:
+        """Median-of-reps wall time (paper §3.4), cache flushed per rep."""
+        if operands is None:
+            operands = self.make_operands(alg)
+        # warm-up (library init, page faults)
+        self.execute(alg, operands)
+        ts: List[float] = []
+        for _ in range(self.reps):
+            if self.flusher:
+                self.flusher.flush()
+            t0 = time.perf_counter()
+            self.execute(alg, operands)
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+    # -- Experiment 3: isolated kernel benchmarks -------------------------
+    def benchmark_call(self, call: KernelCall) -> float:
+        """Time one kernel call in isolation with a flushed cache."""
+        rng = self.rng
+        if call.kind == "gemm":
+            m, n, k = call.dims
+            a = np.asfortranarray(rng.standard_normal((m, k)))
+            b = np.asfortranarray(rng.standard_normal((k, n)))
+            fn = lambda: _blas.dgemm(1.0, a, b)
+        elif call.kind == "syrk":
+            m, k = call.dims
+            a = np.asfortranarray(rng.standard_normal((m, k)))
+            fn = lambda: _blas.dsyrk(1.0, a, lower=1)
+        elif call.kind == "symm":
+            m, n = call.dims
+            s = np.asfortranarray(rng.standard_normal((m, m)))
+            s = np.asfortranarray(s + s.T)
+            b = np.asfortranarray(rng.standard_normal((m, n)))
+            fn = lambda: _blas.dsymm(1.0, s, b, side=0, lower=1)
+        elif call.kind == "tri2full":
+            (m,) = call.dims
+            t = np.asfortranarray(np.tril(rng.standard_normal((m, m))))
+            fn = lambda: np.asfortranarray(np.tril(t) + np.tril(t, -1).T)
+        else:
+            raise ValueError(call.kind)
+        fn()  # warm-up
+        ts = []
+        for _ in range(self.reps):
+            if self.flusher:
+                self.flusher.flush()
+            t0 = time.perf_counter()
+            fn()
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+
+# ------------------------------------------------------------------- JAX ---
+
+
+class JaxRunner:
+    """Build a jit-able callable for an Algorithm.
+
+    ``use_pallas=True`` routes gemm/syrk/symm through the Pallas TPU kernels
+    (interpret mode on CPU); otherwise pure jnp — the two must agree, which
+    tests/test_kernels.py asserts.
+    """
+
+    def __init__(self, use_pallas: bool = False):
+        self.use_pallas = use_pallas
+
+    def build(self, alg: Algorithm) -> Callable:
+        import jax.numpy as jnp
+
+        if self.use_pallas:
+            from repro.kernels import ops as kops
+
+        use_pallas = self.use_pallas
+
+        def fn(*inputs):
+            inter: Dict[int, object] = {}
+
+            def fetch(ref):
+                if isinstance(ref, Leaf):
+                    a = inputs[ref.base]
+                    return jnp.swapaxes(a, -1, -2) if ref.transposed else a
+                return inter[ref]
+
+            out = None
+            for step in alg.steps:
+                c = step.call
+                if c.kind == "gemm":
+                    a, b = fetch(step.lhs), fetch(step.rhs)
+                    out = (kops.gemm(a, b) if use_pallas else a @ b)
+                elif c.kind == "syrk":
+                    a = fetch(step.lhs)
+                    out = (kops.syrk(a) if use_pallas
+                           else jnp.tril(a @ jnp.swapaxes(a, -1, -2)))
+                elif c.kind == "symm":
+                    s, b = fetch(step.lhs), fetch(step.rhs)
+                    if use_pallas:
+                        out = kops.symm(s, b)
+                    else:
+                        full = jnp.tril(s) + jnp.swapaxes(
+                            jnp.tril(s, -1), -1, -2)
+                        out = full @ b
+                elif c.kind == "tri2full":
+                    t = fetch(step.lhs)
+                    out = jnp.tril(t) + jnp.swapaxes(jnp.tril(t, -1), -1, -2)
+                else:
+                    raise ValueError(c.kind)
+                inter[step.out] = out
+            return out
+
+        return fn
+
+    def num_inputs(self, alg: Algorithm) -> int:
+        mx = -1
+        for step in alg.steps:
+            for ref in (step.lhs, step.rhs):
+                if isinstance(ref, Leaf):
+                    mx = max(mx, ref.index)
+        return mx + 1

@@ -1,0 +1,6 @@
+"""Data pipeline: deterministic synthetic LM batches + memmap token stores,
+host-sharded by data-parallel rank, with background prefetch."""
+
+from . import pipeline
+
+__all__ = ["pipeline"]

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+GEMM / SYRK / SYMM — the paper's three BLAS kernels, re-tiled for the MXU —
+plus two beyond-paper fusions: chain_gemm (VMEM-resident intermediate) and
+flash_attention (online softmax, required by the 32k shape cells).
+
+Use :mod:`repro.kernels.ops` (jit wrappers, padding, CPU interpret
+fallback). :mod:`repro.kernels.ref` holds the pure-jnp oracles.
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,65 @@
+"""Blocked GEMM Pallas kernel — the paper's workhorse, TPU edition.
+
+Grid ``(M/bm, N/bn, K/bk)``; each program multiplies a ``(bm, bk)`` A-tile
+with a ``(bk, bn)`` B-tile on the MXU and accumulates into an fp32 VMEM
+scratch tile that persists across the K grid dimension (last-minor iteration
+order on TPU). Block shapes default to 128 — the MXU edge — which the
+perf model (core/perfmodel.py) assumes when charging quantized block work.
+
+VMEM footprint per program: bm·bk + bk·bn + 2·bm·bn fp32 words
+(= 256 KiB at 128³), far under the v5e budget, leaving room for the
+double-buffered pipeline Mosaic inserts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def gemm_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """C[m,n] = A[m,k] @ B[k,n]. Dims must divide the block shape —
+    ``ops.gemm`` pads and unpads around this core."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    k_steps = k // bk
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, k_steps=k_steps),
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

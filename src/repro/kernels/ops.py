@@ -1,0 +1,115 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Responsibilities:
+  * pad operands to block multiples (MXU 128-alignment) and slice results —
+    the quantization the perf model charges for is made explicit here;
+  * select ``interpret=True`` automatically off-TPU so the same call sites
+    work on this CPU container (kernel body runs in Python) and on real
+    TPUs (Mosaic);
+  * fall back to the jnp reference where a kernel's structural premise
+    doesn't hold (e.g. chain_gemm beyond its VMEM bound).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .chain_gemm import chain_gemm_pallas, chain_gemm_vmem_bytes
+from .flash_attention import flash_attention_pallas
+from .gemm import gemm_pallas
+from .symm import symm_pallas
+from .syrk import syrk_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, mults) -> jax.Array:
+    pads = []
+    for dim, q in zip(x.shape, mults):
+        pads.append((0, (-dim) % q))
+    if any(p[1] for p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gemm(a: jax.Array, b: jax.Array, bm: int = 128, bn: int = 128,
+         bk: int = 128) -> jax.Array:
+    m, k = a.shape
+    _, n = b.shape
+    ap = _pad_to(a, (bm, bk))
+    bp = _pad_to(b, (bk, bn))
+    out = gemm_pallas(ap, bp, bm=bm, bn=bn, bk=bk, interpret=_interpret())
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk"))
+def syrk(a: jax.Array, bm: int = 128, bk: int = 128) -> jax.Array:
+    m, _ = a.shape
+    ap = _pad_to(a, (bm, bk))
+    out = syrk_pallas(ap, bm=bm, bk=bk, interpret=_interpret())
+    return out[:m, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def symm(s_lower: jax.Array, b: jax.Array, bm: int = 128,
+         bn: int = 128) -> jax.Array:
+    m, _ = s_lower.shape
+    _, n = b.shape
+    sp = _pad_to(s_lower, (bm, bm))
+    bp = _pad_to(b, (bm, bn))
+    out = symm_pallas(sp, bp, bm=bm, bn=bn, interpret=_interpret())
+    return out[:m, :n]
+
+
+# Fused chain beyond this VMEM residency falls back to two GEMMs.
+_CHAIN_VMEM_LIMIT = 32 * 1024 * 1024
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "bl"))
+def chain_gemm(a: jax.Array, b: jax.Array, c: jax.Array, bm: int = 128,
+               bn: int = 128, bk: int = 128, bl: int = 128) -> jax.Array:
+    m, k = a.shape
+    _, l = b.shape
+    _, n = c.shape
+    need = chain_gemm_vmem_bytes(m, k, l, n, bm, bn,
+                                 dtype_bytes=a.dtype.itemsize)
+    if need > _CHAIN_VMEM_LIMIT:
+        return gemm(gemm(a, b), c)
+    ap = _pad_to(a, (bm, bk))
+    bp = _pad_to(b, (bk, bl))
+    cp = _pad_to(c, (bl, bn))
+    out = chain_gemm_pallas(ap, bp, cp, bm=bm, bn=bn, bk=bk, bl=bl,
+                            interpret=_interpret())
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "scale", "logit_softcap", "window", "bq", "bkv"))
+def flash_attention(q, k, v, causal: bool = True, scale=None,
+                    logit_softcap: float = 0.0, window: int = 0,
+                    bq: int = 128, bkv: int = 128) -> jax.Array:
+    s = q.shape[2]
+    if s % bq or s % bkv:
+        # Sequence not block-divisible: shrink blocks or use the reference.
+        if s % 128 == 0:
+            bq = bkv = 128
+        else:
+            return ref.flash_attention(q, k, v, causal=causal, scale=scale,
+                                       logit_softcap=logit_softcap,
+                                       window=window)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, scale=scale, logit_softcap=logit_softcap,
+        window=window, bq=bq, bkv=bkv, interpret=_interpret())
+
+
+def tri2full(t: jax.Array) -> jax.Array:
+    """Pure data movement (paper charges 0 FLOPs); no kernel needed —
+    XLA's fused tril/transpose is already bandwidth-bound."""
+    return ref.tri2full(t)

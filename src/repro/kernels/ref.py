@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the mathematical definition, written with plain jnp ops and
+no tiling — the ground truth that tests/test_kernels.py asserts the Pallas
+kernels against (interpret mode on CPU, real Mosaic on TPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C = A @ B with fp32 accumulation."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def syrk(a: jax.Array) -> jax.Array:
+    """Lower triangle of A @ Aᵀ (strictly-upper entries zero)."""
+    full = jnp.dot(a, a.T, preferred_element_type=jnp.float32)
+    return jnp.tril(full).astype(a.dtype)
+
+
+def symm(s_lower: jax.Array, b: jax.Array) -> jax.Array:
+    """C = S @ B where S is symmetric, stored in the lower triangle of
+    ``s_lower`` (strictly-upper entries ignored)."""
+    s = jnp.tril(s_lower) + jnp.tril(s_lower, -1).T
+    return jnp.dot(s, b, preferred_element_type=jnp.float32).astype(b.dtype)
+
+
+def tri2full(t: jax.Array) -> jax.Array:
+    """Mirror the lower triangle into a full symmetric matrix."""
+    return (jnp.tril(t) + jnp.tril(t, -1).T).astype(t.dtype)
+
+
+def chain_gemm(a: jax.Array, b: jax.Array, c: jax.Array) -> jax.Array:
+    """(A @ B) @ C with fp32 accumulation throughout."""
+    m1 = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    return jnp.dot(m1, c.astype(jnp.float32),
+                   preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, H, S, D)
+    k: jax.Array,  # (B, Hkv, S, D)
+    v: jax.Array,  # (B, Hkv, S, D)
+    causal: bool = True,
+    scale: float | None = None,
+    logit_softcap: float = 0.0,
+    window: int = 0,
+) -> jax.Array:
+    """Reference attention with GQA broadcast, optional causal mask,
+    sliding window, and Gemma-2 style logit soft-capping."""
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    if scale is None:
+        scale = d ** -0.5
+    kq = jnp.repeat(k, group, axis=1)
+    vq = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kq,
+                        preferred_element_type=jnp.float32) * scale
+    if logit_softcap > 0:
+        logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+    idx = jnp.arange(s)
+    mask = jnp.ones((s, s), dtype=bool)
+    if causal:
+        mask &= idx[:, None] >= idx[None, :]
+    if window > 0:
+        mask &= idx[:, None] - idx[None, :] < window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p.astype(vq.dtype), vq)
+    return out.astype(q.dtype)

@@ -1,0 +1,154 @@
+"""HLO-text analysis: collective traffic + roofline terms from a compiled
+dry-run artifact.
+
+``cost_analysis()`` reports per-device FLOPs/bytes but no collective bytes,
+so we parse the (post-SPMD-partitioning) HLO: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+op contributes its result-shape bytes (documented convention — for
+all-reduce the wire traffic is ~2·(n−1)/n× that; we report raw result
+bytes and keep the convention fixed across §Perf iterations so deltas are
+meaningful).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# shapes like bf16[8,128]{1,0} or f32[] — capture dtype + dims.
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:e[0-9]+m[0-9]+fn?)?)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[^=]+?)\s+"
+    r"(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(",
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.counts.values())
+
+    def summary(self) -> str:
+        parts = [
+            f"{k}: n={self.counts[k]} bytes={self.bytes_[k]:,}"
+            for k in sorted(self.counts)
+        ]
+        return "; ".join(parts) if parts else "none"
+
+
+def top_collectives(hlo_text: str, n: int = 20):
+    """Rank individual collective ops by result bytes, with op metadata —
+    the §Perf attribution tool (which tensor is being moved, from where
+    in the program)."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m or f"{m.group(2)}-done(" in line:
+            continue
+        b = _shape_bytes(m.group(1))
+        meta = ""
+        mm = re.search(r'op_name="([^"]+)"', line)
+        if mm:
+            meta = mm.group(1)[-110:]
+        out.append((b, m.group(2), m.group(1).strip()[:60], meta))
+    out.sort(reverse=True)
+    return out[:n]
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    bytes_: Dict[str, int] = {}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        # async pairs: count the -start only (the -done carries same shape)
+        if f"{op}-done(" in line:
+            continue
+        b = _shape_bytes(type_str)
+        counts[op] = counts.get(op, 0) + 1
+        bytes_[op] = bytes_.get(op, 0) + b
+    return CollectiveStats(counts=counts, bytes_=bytes_)
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Three-term roofline for one (arch × shape × mesh) cell."""
+
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    chips: int
+    peak_flops: float = 197e12
+    hbm_bw: float = 819e9
+    link_bw: float = 50e9
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / self.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / self.link_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def model_flops_ratio(self, model_flops_total: float) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (total across chips)."""
+        hlo_total = self.flops_per_device * self.chips
+        return model_flops_total / hlo_total if hlo_total else 0.0
+
+    def roofline_fraction(self, model_flops_total: float) -> float:
+        """Useful-FLOPs throughput achievable vs chip peak, given the
+        dominant term: (MODEL_FLOPS/chips/t_bound) / peak."""
+        if self.t_bound <= 0:
+            return 0.0
+        ach = model_flops_total / self.chips / self.t_bound
+        return ach / self.peak_flops

@@ -1,0 +1,224 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape) cell.
+
+``abstract_state``/``abstract_batch``/``abstract_serve_state`` build the
+exact pytrees the jitted steps take, as ShapeDtypeStructs (no allocation),
+plus matching NamedShardings:
+
+  * params/optimizer — logical-axis rules (TP on ``model``, FSDP on
+    ``data``(+``pod``));
+  * batch — batch dim over (pod, data);
+  * KV caches — batch over (pod, data), **sequence over model**
+    (flash-decoding-style sharded-KV softmax: GSPMD turns the masked
+    softmax + PV contraction into partial reductions + tiny all-reduces);
+  * SSM caches — batch over (pod, data), heads over model.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ShapeSpec
+from repro.models import api
+from repro.models.attention import KVCache
+from repro.models.encdec import EncDecCaches
+from repro.models.hybrid import HybridCaches
+from repro.models.ssm import SSMCache
+from repro.models.transformer import LayerCaches, ModelConfig
+from repro.optim import adamw
+from repro.sharding import rules as shrules
+from repro.train.train_step import TrainState
+from repro.serve.decode import ServeState
+
+
+def _batch_axes(mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _div(n: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return False
+    if isinstance(axis, tuple):
+        import math
+        size = math.prod(mesh.shape[a] for a in axis)
+    else:
+        size = mesh.shape[axis]
+    return n % size == 0
+
+
+# ------------------------------------------------------------- abstract ---
+
+def abstract_init(cfg: ModelConfig, dtype=jnp.float32):
+    """Returns (param ShapeDtypeStructs, logical-axes pytree), allocation-
+    free: params are traced with eval_shape; the axes pytree is static
+    (plain python tuples) so it is captured from the traced init call."""
+    key = jax.random.PRNGKey(0)
+    captured = {}
+
+    def initf(k):
+        p, a = api.init(k, cfg, dtype)
+        captured["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(initf, key)
+    return shapes, captured["axes"]
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, dtype=jnp.float32,
+                    policy: str = "fsdp"):
+    shapes, axes = abstract_init(cfg, dtype)
+    from repro.sharding.rules import rules_for
+    specs = shrules.params_specs(axes, shapes, mesh,
+                                 rules=rules_for(policy))
+    return shapes, specs, shrules.shardings_of(specs, mesh)
+
+
+def abstract_train_state(cfg: ModelConfig, mesh: Mesh,
+                         dtype=jnp.float32, policy: str = "auto"):
+    """(TrainState structs, TrainState shardings).
+
+    ``policy``: fsdp | zero1 | auto — parameter sharding across the data
+    axes. Optimizer moments are always data-sharded (ZeRO); ``auto``
+    selects by modeled per-device memory (rules.pick_param_policy).
+    """
+    from repro.sharding.rules import pick_param_policy
+    if policy == "auto":
+        policy = pick_param_policy(cfg.param_count(), mesh)
+    pshapes, pspecs, pshard = param_shardings(cfg, mesh, dtype,
+                                              policy=policy)
+    # Moments: always ZeRO-sharded over data (DEFAULT_RULES).
+    _, _, mshard = param_shardings(cfg, mesh, dtype, policy="fsdp")
+    opt_shapes = jax.eval_shape(adamw.init, pshapes)
+    scalar = NamedSharding(mesh, P())
+    opt_shard = adamw.AdamWState(
+        step=scalar,
+        mu=jax.tree.map(lambda s: s, mshard),
+        nu=jax.tree.map(lambda s: s, mshard),
+    )
+    state = TrainState(params=pshapes, opt=opt_shapes,
+                       step=jax.ShapeDtypeStruct((), jnp.int32))
+    shard = TrainState(params=pshard, opt=opt_shard, step=scalar)
+    return state, shard
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh
+                   ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    b, s = shape.global_batch, shape.seq_len
+    ba = _batch_axes(mesh)
+    bspec = NamedSharding(mesh, P(ba))
+    # VLM: the stub vision prefix occupies the first positions of the
+    # sequence budget, so token count shrinks to keep total == seq_len.
+    s_tok = s - cfg.vision_tokens if cfg.family == "vlm" else s
+    specs: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((b, s_tok), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s_tok), jnp.int32),
+    }
+    shards: Dict[str, Any] = {"tokens": bspec, "labels": bspec}
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        shards["frames"] = bspec
+    if cfg.family == "vlm":
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+        shards["vision_embeds"] = bspec
+    return specs, shards
+
+
+# ------------------------------------------------------------- caches ----
+
+def cache_specs(cfg: ModelConfig, caches_shapes: Any, mesh: Mesh) -> Any:
+    """PartitionSpecs for a (stacked) cache pytree by structure."""
+    bax = _batch_axes(mesh)
+
+    def kv_spec(arr, dim_s=2, dim_h=3):
+        # (L, B, S, H, D)
+        entries = [None] * len(arr.shape)
+        entries[1] = bax if _div(arr.shape[1], mesh, bax) else None
+        if _div(arr.shape[dim_s], mesh, "model"):
+            entries[dim_s] = "model"
+        return P(*entries)
+
+    def ssm_state_spec(arr):
+        # (L, B, H, N, P)
+        entries = [None] * len(arr.shape)
+        entries[1] = bax if _div(arr.shape[1], mesh, bax) else None
+        if _div(arr.shape[2], mesh, "model"):
+            entries[2] = "model"
+        return P(*entries)
+
+    def conv_spec(arr):
+        # (L, B, K, C)
+        entries = [None] * len(arr.shape)
+        entries[1] = bax if _div(arr.shape[1], mesh, bax) else None
+        if _div(arr.shape[3], mesh, "model"):
+            entries[3] = "model"
+        return P(*entries)
+
+    def walk(obj):
+        if isinstance(obj, KVCache):
+            return KVCache(k=kv_spec(obj.k), v=kv_spec(obj.v), length=P())
+        if isinstance(obj, SSMCache):
+            return SSMCache(conv=conv_spec(obj.conv),
+                            state=ssm_state_spec(obj.state), length=P())
+        if isinstance(obj, LayerCaches):
+            return LayerCaches(
+                kv=walk(obj.kv) if obj.kv is not None else None,
+                ssm=walk(obj.ssm) if obj.ssm is not None else None)
+        if isinstance(obj, EncDecCaches):
+            return EncDecCaches(self_kv=walk(obj.self_kv),
+                                cross_k=kv_spec(obj.cross_k),
+                                cross_v=kv_spec(obj.cross_v))
+        if isinstance(obj, HybridCaches):
+            return HybridCaches(ssm=walk(obj.ssm),
+                                shared_kv=walk(obj.shared_kv))
+        raise TypeError(type(obj))
+
+    return walk(caches_shapes)
+
+
+def abstract_serve_state(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                         dtype=jnp.bfloat16):
+    """(ServeState structs, shardings, param structs, param shardings)."""
+    pshapes, pspecs, pshard = param_shardings(cfg, mesh, dtype)
+    b, max_s = shape.global_batch, shape.seq_len
+    bi_specs = {}
+    if cfg.family == "encdec":
+        bi_specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), dtype)
+
+    def mk(params, bi):
+        return api.init_caches(params, cfg, b, max_s,
+                               batch_inputs=bi or None, dtype=dtype)
+
+    caches_shapes = jax.eval_shape(mk, pshapes, bi_specs)
+    cspecs = cache_specs(cfg, caches_shapes, mesh)
+    cshard = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    bax = _batch_axes(mesh)
+    tok_shard = NamedSharding(
+        mesh, P(bax if b % _axsize(mesh, bax) == 0 else None))
+    state = ServeState(
+        caches=caches_shapes,
+        last_tokens=jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        rng=jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+    shard = ServeState(caches=cshard, last_tokens=tok_shard,
+                       rng=NamedSharding(mesh, P()))
+    return state, shard, pshapes, pshard
+
+
+def _axsize(mesh: Mesh, axis) -> int:
+    import math
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return math.prod(mesh.shape[a] for a in axis)
+    return mesh.shape[axis]

@@ -1,0 +1,11 @@
+"""Pure-JAX model zoo for the assigned architectures.
+
+No flax/haiku — parameters are plain pytrees (nested dicts of jax.Array),
+paired with a parallel pytree of *logical axis names* consumed by
+``repro.sharding`` to derive PartitionSpecs. Layer stacks are stacked along
+axis 0 and applied with ``lax.scan`` for O(1) compile cost in depth.
+"""
+
+from . import attention, hybrid, layers, moe, ssm, transformer
+
+__all__ = ["attention", "hybrid", "layers", "moe", "ssm", "transformer"]

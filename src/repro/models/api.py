@@ -1,0 +1,95 @@
+"""Family-dispatching facade: one (init, train, prefill, decode) API for
+every assigned architecture. The launcher, dry-run, trainer and server all
+go through these four functions and never inspect the family themselves.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, hybrid, transformer
+from .layers import Axes, Params
+from .transformer import ModelConfig
+
+
+def init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32
+         ) -> Tuple[Params, Axes]:
+    if cfg.family == "encdec":
+        return encdec.init(key, cfg, dtype)
+    if cfg.family == "hybrid":
+        return hybrid.init(key, cfg, dtype)
+    return transformer.init(key, cfg, dtype)
+
+
+def forward_train(params: Params, cfg: ModelConfig, batch: Dict[str, Any]
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """batch → (logits fp32, aux_loss). Batch keys per family:
+    tokens (B,S); encdec adds frames (B,S_enc,d); vlm adds
+    vision_embeds (B,P,d)."""
+    if cfg.family == "encdec":
+        return encdec.apply_train(params, cfg, batch["tokens"],
+                                  batch["frames"])
+    if cfg.family == "hybrid":
+        return hybrid.apply_train(params, cfg, batch["tokens"])
+    prefix = batch.get("vision_embeds") if cfg.family == "vlm" else None
+    return transformer.apply_train(params, cfg, batch["tokens"],
+                                   prefix_embeds=prefix)
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
+            aux_weight: float = 0.01) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Next-token cross-entropy (+ MoE aux)."""
+    logits, aux = forward_train(params, cfg, batch)
+    labels = batch["labels"]
+    # VLM prefix positions carry no labels.
+    if logits.shape[1] != labels.shape[1]:
+        logits = logits[:, logits.shape[1] - labels.shape[1]:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    ce = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = ce + aux_weight * aux
+    return total, {"loss": ce, "aux": aux}
+
+
+def init_caches(params: Params, cfg: ModelConfig, batch: int, max_s: int,
+                batch_inputs: Optional[Dict[str, Any]] = None,
+                dtype=jnp.bfloat16):
+    if cfg.family == "encdec":
+        assert batch_inputs is not None and "frames" in batch_inputs
+        return encdec.init_caches(params, cfg, batch_inputs["frames"],
+                                  max_s, dtype)
+    if cfg.family == "hybrid":
+        return hybrid.init_caches(cfg, batch, max_s, dtype)
+    return transformer.init_caches(cfg, batch, max_s, dtype)
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
+            caches) -> Tuple[jax.Array, Any]:
+    if cfg.family == "encdec":
+        # Whisper prefill = decoding prompt tokens against encoder output;
+        # teacher-forced path fills self-attention caches token by token in
+        # serve.decode; here we return logits for the prompt.
+        logits, _ = encdec.apply_train(params, cfg, batch["tokens"],
+                                       batch["frames"])
+        return logits, caches
+    if cfg.family == "hybrid":
+        raise NotImplementedError(
+            "hybrid prefill runs through serve.decode chunked path")
+    prefix = batch.get("vision_embeds") if cfg.family == "vlm" else None
+    return transformer.apply_prefill(params, cfg, batch["tokens"], caches,
+                                     prefix_embeds=prefix)
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                caches) -> Tuple[jax.Array, Any]:
+    if cfg.family == "encdec":
+        return encdec.apply_decode(params, cfg, tokens, caches)
+    if cfg.family == "hybrid":
+        return hybrid.apply_decode(params, cfg, tokens, caches)
+    return transformer.apply_decode(params, cfg, tokens, caches)

@@ -1,0 +1,217 @@
+"""Hybrid Mamba2 + shared-attention assembly (zamba2 family).
+
+Zamba2 interleaves Mamba2 blocks with a *shared* transformer block whose
+parameters are reused at every application point (arXiv:2411.15242) —
+depth-wise weight sharing keeps the parameter count near-pure-SSM while
+restoring attention's associative recall. We reproduce that structure:
+``n_layers`` Mamba2 blocks; after every ``attn_every`` of them, the single
+shared attention+MLP block runs (with sliding-window attention so the
+long_500k decode cell stays sub-quadratic).
+
+Simplifications vs the HF implementation (noted per DESIGN.md §8):
+zamba2's concatenated [hidden, embedding] input to the shared block and its
+per-application LoRA deltas are omitted — the shared block reads the
+hidden state directly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.context import shard_seq
+
+from . import attention, layers, scan_util, ssm as ssm_lib
+from .attention import AttnConfig, KVCache
+from .layers import Axes, Params
+from .ssm import SSMCache
+from .transformer import ModelConfig, _logits
+
+
+class HybridCaches(NamedTuple):
+    ssm: SSMCache            # stacked (L, ...)
+    shared_kv: KVCache       # stacked (n_attn, ...)
+
+
+def n_shared_applications(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+
+
+def init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32
+         ) -> Tuple[Params, Axes]:
+    assert cfg.family == "hybrid" and cfg.ssm is not None
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    p: Params = {}
+    a: Axes = {}
+    p["embed"], a["embed"] = layers.embed_init(
+        keys[0], cfg.padded_vocab, cfg.d_model, dtype)
+
+    blocks, baxes = [], None
+    for i in range(cfg.n_layers):
+        bp: Params = {}
+        ba: Axes = {}
+        bp["pre_norm"], ba["pre_norm"] = layers.rmsnorm_init(
+            cfg.d_model, dtype)
+        bp["mixer"], ba["mixer"] = ssm_lib.init(keys[1 + i], cfg.ssm, dtype)
+        blocks.append(bp)
+        baxes = ba
+    p["blocks"] = layers.stack_layers(blocks)
+    a["blocks"] = layers.stacked_axes(baxes)
+
+    # The single shared attention+MLP block.
+    ks = jax.random.split(keys[-2], 3)
+    sp: Params = {}
+    sa: Axes = {}
+    sp["pre_attn_norm"], sa["pre_attn_norm"] = layers.rmsnorm_init(
+        cfg.d_model, dtype)
+    sp["attn"], sa["attn"] = attention.init(ks[0], cfg.attn_cfg, dtype)
+    sp["pre_mlp_norm"], sa["pre_mlp_norm"] = layers.rmsnorm_init(
+        cfg.d_model, dtype)
+    sp["mlp"], sa["mlp"] = layers.glu_mlp_init(
+        ks[1], cfg.d_model, cfg.d_ff, dtype)
+    p["shared"] = sp
+    a["shared"] = sa
+    p["final_norm"], a["final_norm"] = layers.rmsnorm_init(cfg.d_model, dtype)
+    return p, a
+
+
+def _shared_block_train(cfg: ModelConfig, sp: Params, x: jax.Array,
+                        rope) -> jax.Array:
+    acfg = cfg.attn_cfg._replace(window=cfg.shared_window)
+    h = layers.rmsnorm(sp["pre_attn_norm"], x)
+    x = x + attention.apply_train(sp["attn"], acfg, h, rope=rope)
+    h = layers.rmsnorm(sp["pre_mlp_norm"], x)
+    return shard_seq(x + layers.glu_mlp(sp["mlp"], h))
+
+
+def apply_train(params: Params, cfg: ModelConfig, tokens: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
+    x = layers.embed(params["embed"], tokens)
+    s = x.shape[1]
+    rope = layers.rope_frequencies(cfg.head_dim, s, cfg.rope_theta)
+    k = cfg.attn_every or cfg.n_layers
+    n_groups = cfg.n_layers // k
+    rem = cfg.n_layers - n_groups * k
+    grouped = jax.tree.map(
+        lambda a: a[: n_groups * k].reshape((n_groups, k) + a.shape[1:]),
+        params["blocks"])
+
+    def ssm_block(x, bp):
+        h = layers.rmsnorm(bp["pre_norm"], x)
+        return shard_seq(x + ssm_lib.apply_train(bp["mixer"], cfg.ssm, h)), None
+
+    from .transformer import _maybe_remat
+    ssm_block = _maybe_remat(ssm_block, cfg.remat)
+
+    def group_body(x, bps):
+        x, _ = scan_util.scan(ssm_block, x, bps)
+        x = _shared_block_train(cfg, params["shared"], x, rope)
+        return x, None
+
+    x, _ = scan_util.scan(group_body, x, grouped)
+    if rem:
+        tail = jax.tree.map(lambda a: a[-rem:], params["blocks"])
+        x, _ = scan_util.scan(ssm_block, x, tail)
+    logits = _logits(cfg, params, x)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_s: int,
+                dtype=jnp.bfloat16) -> HybridCaches:
+    L = cfg.n_layers
+    na = max(1, n_shared_applications(cfg))
+    one_s = ssm_lib.init_cache(cfg.ssm, batch, dtype)
+    ssm = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (L,) + a.shape).copy(), one_s)
+    # Shared attention: windowed KV cache — ring buffer of window size
+    # bounds memory at 500k contexts.
+    win = cfg.shared_window or max_s
+    eff = min(win, max_s)
+    one_kv = attention.init_cache(cfg.attn_cfg, batch, eff, dtype)
+    kv = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (na,) + a.shape).copy(), one_kv)
+    return HybridCaches(ssm=ssm, shared_kv=kv)
+
+
+def _shared_block_decode(cfg: ModelConfig, sp: Params, x, kv: KVCache, rope):
+    """Decode through the shared block with a ring-buffer window cache."""
+    acfg = cfg.attn_cfg._replace(window=cfg.shared_window)
+    h = layers.rmsnorm(sp["pre_attn_norm"], x)
+    b = h.shape[0]
+    pos = jnp.broadcast_to(kv.length, (b, 1))
+    q, k, v = attention._project_qkv(sp["attn"], acfg, h, pos, rope)
+    size = kv.k.shape[1]
+    slot = kv.length % size
+    new_k = jax.lax.dynamic_update_slice(
+        kv.k, k.astype(kv.k.dtype), (0, slot, 0, 0))
+    new_v = jax.lax.dynamic_update_slice(
+        kv.v, v.astype(kv.v.dtype), (0, slot, 0, 0))
+    group = acfg.n_heads // acfg.n_kv_heads
+    scale = acfg.head_dim ** -0.5
+    kq = jnp.repeat(new_k, group, axis=2)
+    vq = jnp.repeat(new_v, group, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(kq.dtype), kq,
+                        preferred_element_type=jnp.float32) * scale
+    # Ring-buffer positions: slot s holds absolute position
+    # length - ((slot - s) mod size); valid if within [0, length].
+    slots = jnp.arange(size)
+    age = (slot - slots) % size
+    abs_pos = kv.length - age
+    valid = (abs_pos >= 0) & (abs_pos <= kv.length)
+    if cfg.shared_window:
+        valid &= age < cfg.shared_window
+    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    pattn = jax.nn.softmax(logits, axis=-1).astype(vq.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", pattn, vq)
+    out = out.reshape(b, 1, acfg.n_heads * acfg.head_dim)
+    x = x + layers.dense(sp["attn"]["wo"], out.astype(x.dtype))
+    h = layers.rmsnorm(sp["pre_mlp_norm"], x)
+    x = x + layers.glu_mlp(sp["mlp"], h)
+    return x, KVCache(new_k, new_v, kv.length + 1)
+
+
+def apply_decode(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                 caches: HybridCaches) -> Tuple[jax.Array, HybridCaches]:
+    x = layers.embed(params["embed"], tokens)
+    rope = layers.rope_frequencies(
+        cfg.head_dim, cfg.max_seq, cfg.rope_theta)
+    k = cfg.attn_every or cfg.n_layers
+    n_groups = cfg.n_layers // k
+    rem = cfg.n_layers - n_groups * k
+    grouped_ssm = jax.tree.map(
+        lambda a: a[: n_groups * k].reshape((n_groups, k) + a.shape[1:]),
+        caches.ssm)
+    grouped_blocks = jax.tree.map(
+        lambda a: a[: n_groups * k].reshape((n_groups, k) + a.shape[1:]),
+        params["blocks"])
+
+    def ssm_block(x, sl):
+        bp, sc = sl
+        h = layers.rmsnorm(bp["pre_norm"], x)
+        out, sc2 = ssm_lib.apply_decode(bp["mixer"], cfg.ssm, h, sc)
+        return x + out, sc2
+
+    new_kvs = []
+    xs = x
+    new_ssm_groups = []
+    for gi in range(n_groups):
+        bps = jax.tree.map(lambda a: a[gi], grouped_blocks)
+        scs = jax.tree.map(lambda a: a[gi], grouped_ssm)
+        xs, sc2 = scan_util.scan(ssm_block, xs, (bps, scs))
+        new_ssm_groups.append(sc2)
+        kv = jax.tree.map(lambda a: a[gi], caches.shared_kv)
+        xs, kv2 = _shared_block_decode(cfg, params["shared"], xs, kv, rope)
+        new_kvs.append(kv2)
+    new_ssm = jax.tree.map(lambda *xs_: jnp.concatenate(xs_, axis=0),
+                           *new_ssm_groups)
+    if rem:
+        tail_b = jax.tree.map(lambda a: a[-rem:], params["blocks"])
+        tail_c = jax.tree.map(lambda a: a[-rem:], caches.ssm)
+        xs, sc2 = scan_util.scan(ssm_block, xs, (tail_b, tail_c))
+        new_ssm = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                               new_ssm, sc2)
+    new_kv = jax.tree.map(lambda *xs_: jnp.stack(xs_, axis=0), *new_kvs)
+    logits = _logits(cfg, params, xs)
+    return logits, HybridCaches(ssm=new_ssm, shared_kv=new_kv)

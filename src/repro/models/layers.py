@@ -1,0 +1,139 @@
+"""Shared building blocks: init helpers, norms, MLPs, RoPE, embeddings.
+
+Every ``init_*`` returns ``(params, axes)`` — two parallel pytrees, the
+second holding logical axis-name tuples (e.g. ``("embed", "ffn")``) that
+``repro.sharding.rules`` maps to mesh PartitionSpecs. This keeps sharding
+policy out of model code entirely.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+Axes = Dict[str, Any]
+
+
+# ------------------------------------------------------------------ init ---
+
+def dense_init(key: jax.Array, d_in: int, d_out: int,
+               axes: Tuple[str, str], dtype=jnp.float32,
+               scale: Optional[float] = None) -> Tuple[Params, Axes]:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    w = jax.random.normal(key, (d_in, d_out), dtype) * scale
+    return {"w": w}, {"w": axes}
+
+
+def embed_init(key: jax.Array, vocab: int, d: int,
+               dtype=jnp.float32) -> Tuple[Params, Axes]:
+    w = jax.random.normal(key, (vocab, d), dtype) * 0.02
+    return {"w": w}, {"w": ("vocab", "embed")}
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Tuple[Params, Axes]:
+    return {"g": jnp.ones((d,), dtype)}, {"g": ("embed",)}
+
+
+# ------------------------------------------------------------- functions ---
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6,
+            plus_one: bool = False) -> jax.Array:
+    """RMSNorm. ``plus_one=True`` uses the gemma convention g ← (1 + g)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xn = xf * jax.lax.rsqrt(var + eps)
+    g = params["g"].astype(jnp.float32)
+    if plus_one:
+        g = 1.0 + g
+    return (xn * g).astype(dt)
+
+
+def dense(params: Params, x: jax.Array) -> jax.Array:
+    return x @ params["w"].astype(x.dtype)
+
+
+def embed(params: Params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["w"], tokens, axis=0)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma-2 logit soft-capping; identity when cap <= 0."""
+    if cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ----------------------------------------------------------------- RoPE ---
+
+def rope_frequencies(dh: int, max_pos: int, theta: float = 10000.0):
+    inv = 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+    pos = jnp.arange(max_pos, dtype=jnp.float32)
+    ang = jnp.outer(pos, inv)               # (max_pos, dh/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array,
+               positions: jax.Array) -> jax.Array:
+    """x: (B, S, H, Dh); positions: (B, S) absolute positions."""
+    dt = x.dtype
+    c = cos[positions][:, :, None, :]        # (B, S, 1, Dh/2)
+    s = sin[positions][:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(dt)
+
+
+# ----------------------------------------------------------------- MLPs ---
+
+def glu_mlp_init(key: jax.Array, d: int, d_ff: int,
+                 dtype=jnp.float32) -> Tuple[Params, Axes]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p, a = {}, {}
+    p["gate"], a["gate"] = dense_init(k1, d, d_ff, ("embed", "ffn"), dtype)
+    p["up"], a["up"] = dense_init(k2, d, d_ff, ("embed", "ffn"), dtype)
+    p["down"], a["down"] = dense_init(k3, d_ff, d, ("ffn", "embed"), dtype)
+    return p, a
+
+
+def glu_mlp(params: Params, x: jax.Array, activation: str = "silu"
+            ) -> jax.Array:
+    g = dense(params["gate"], x)
+    u = dense(params["up"], x)
+    act = jax.nn.silu if activation == "silu" else jax.nn.gelu
+    return dense(params["down"], act(g) * u)
+
+
+def mlp_init(key: jax.Array, d: int, d_ff: int,
+             dtype=jnp.float32) -> Tuple[Params, Axes]:
+    """Plain 2-layer MLP (whisper)."""
+    k1, k2 = jax.random.split(key)
+    p, a = {}, {}
+    p["up"], a["up"] = dense_init(k1, d, d_ff, ("embed", "ffn"), dtype)
+    p["down"], a["down"] = dense_init(k2, d_ff, d, ("ffn", "embed"), dtype)
+    return p, a
+
+
+def mlp(params: Params, x: jax.Array) -> jax.Array:
+    return dense(params["down"], jax.nn.gelu(dense(params["up"], x)))
+
+
+# ------------------------------------------------------------- stacking ---
+
+def stack_layers(layer_params: list) -> Params:
+    """Stack per-layer pytrees along axis 0 for lax.scan."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *layer_params)
+
+
+def stacked_axes(axes: Axes) -> Axes:
+    """Prefix every logical axis tuple with the scan 'layers' axis."""
+    return jax.tree.map(
+        lambda t: ("layers",) + tuple(t),
+        axes,
+        is_leaf=lambda t: isinstance(t, tuple) and all(
+            isinstance(s, str) for s in t),
+    )

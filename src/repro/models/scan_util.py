@@ -1,0 +1,60 @@
+"""Scan wrapper with a cost-measurement unroll mode.
+
+XLA's ``cost_analysis`` counts a ``while`` body ONCE regardless of trip
+count, which silently breaks any FLOPs/bytes accounting over
+``lax.scan``-stacked layers. All layer/KV-block scans in the model stack go
+through :func:`scan` below; inside :func:`unrolled` (used by the dry-run's
+depth-variant compiles) they become Python loops, so the compiled HLO has
+no while ops and cost analysis is exact. Production/training compiles keep
+the real ``lax.scan`` (O(1) compile cost, loop in HLO).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+
+_state = threading.local()
+
+
+def _unroll() -> bool:
+    return getattr(_state, "unroll", False)
+
+
+@contextlib.contextmanager
+def unrolled(enable: bool = True):
+    prev = getattr(_state, "unroll", False)
+    _state.unroll = enable
+    try:
+        yield
+    finally:
+        _state.unroll = prev
+
+
+def _length_of(xs: Any) -> int:
+    leaves = jax.tree.leaves(xs)
+    if not leaves:
+        raise ValueError("scan with no xs leaves needs explicit length")
+    return leaves[0].shape[0]
+
+
+def scan(body: Callable, init: Any, xs: Any, length: Optional[int] = None):
+    """Drop-in for jax.lax.scan(body, init, xs) honoring the unroll mode."""
+    if not _unroll():
+        return jax.lax.scan(body, init, xs)
+    n = length if length is not None else _length_of(xs)
+    carry = init
+    ys = []
+    for i in range(n):
+        sl = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, sl)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(
+            lambda *zs: jax.numpy.stack(zs, axis=0), *ys)
+    else:
+        stacked = None
+    return carry, stacked

@@ -1,0 +1,371 @@
+"""Mamba2 / SSD layer — with the paper's algorithm selection built in.
+
+The SSD (state-space duality) layer is the cleanest in-model instance of the
+paper's thesis: the *same* sequence transformation
+
+    h_t = exp(Δt·A)·h_{t-1} + Δt·B_t xₜᵀ ,   y_t = C_t·h_t
+
+admits two mathematically equivalent algorithms —
+
+  * ``quadratic``  — materialize the (S×S) semiseparable kernel
+    ``(C·Bᵀ ⊙ L)``; FLOPs ≈ 2·S²·(N+P) per head: cheap for short S;
+  * ``chunked``    — intra-chunk quadratic + inter-chunk recurrence;
+    FLOPs ≈ 2·S·Q·(N+P) + 4·S·N·P: linear in S.
+
+The crossover depends on (S, N, P, Q) *and* on achieved kernel efficiency
+(the chunked form's many small GEMMs quantize worse on the MXU) — i.e.
+FLOP count alone mispredicts near the boundary, which is the paper's
+anomaly phenomenon. ``select_ssd_mode`` scores both algorithms with
+either the ``flops`` discriminant (paper baseline) or the ``perfmodel``
+discriminant (paper's conclusion) using the same machinery as
+:mod:`repro.core`.
+
+Inter-chunk states are carried with ``lax.associative_scan`` (log-depth,
+TPU friendly) rather than a serial scan.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flops import gemm as gemm_call
+from repro.core.perfmodel import AnalyticalTPUProfile, KernelProfile
+
+from . import layers
+from .layers import Axes, Params, dense, dense_init
+
+
+class SSMConfig(NamedTuple):
+    d_model: int
+    d_inner: int          # = n_heads * head_dim (expand * d_model)
+    n_heads: int
+    head_dim: int
+    n_groups: int
+    d_state: int          # N
+    conv_kernel: int = 4
+    chunk: int = 128
+    ssd_mode: str = "auto"   # auto | quadratic | chunked
+    discriminant: str = "perfmodel"
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array      # (B, K-1, conv_channels)
+    state: jax.Array     # (B, H, N, P)
+    length: jax.Array    # () int32
+
+
+# ------------------------------------------------- algorithm selection ---
+
+def ssd_algorithm_calls(mode: str, s: int, n: int, p: int, q: int,
+                        heads: int):
+    """Approximate each SSD form as a bag of GEMM calls for the cost model.
+
+    On TPU both forms lower to BATCHED einsums (heads × chunks are batch
+    dims of a single fused kernel), so each step type is modeled as ONE
+    call whose N dimension absorbs the batch — total FLOPs exact, overhead
+    charged once per einsum. Modeling them as nc·heads separate kernels
+    (the CPU-BLAS view) over-charges dispatch overhead ~4096× at
+    (S=4096, Q=128, H=32) and flips the selection to the quadratic form —
+    a mis-calibrated profile producing exactly the wrong-algorithm anomaly
+    the paper studies (§Perf-3, iteration 3).
+    """
+    if mode == "quadratic":
+        return [gemm_call(s, s * heads, n), gemm_call(s, p * heads, s)]
+    nc = max(1, s // q)
+    batch = nc * heads
+    return [
+        gemm_call(q, q * batch, n),    # intra CBᵀ
+        gemm_call(q, p * batch, q),    # intra (kernel)·X
+        gemm_call(n, p * batch, q),    # chunk states  B·X
+        gemm_call(q, p * batch, n),    # inter C·H
+    ]
+
+
+def select_ssd_mode(s: int, n: int, p: int, q: int, heads: int = 1,
+                    discriminant: str = "perfmodel",
+                    profile: Optional[KernelProfile] = None) -> str:
+    """Choose the SSD algorithm with the paper's discriminants."""
+    prof = profile or AnalyticalTPUProfile()
+    scores = {}
+    for mode in ("quadratic", "chunked"):
+        calls = ssd_algorithm_calls(mode, s, n, p, q, heads)
+        if discriminant == "flops":
+            scores[mode] = sum(c.flops for c in calls)
+        else:
+            scores[mode] = sum(prof.time(c, 2) for c in calls)
+    return min(scores, key=scores.get)
+
+
+# ------------------------------------------------------------- the math ---
+
+def _segsum_cumsum(da: jax.Array) -> jax.Array:
+    """Cumulative log-decay along the time axis (axis=-2 convention:
+    da shape (..., S, H)) — returns same shape."""
+    return jnp.cumsum(da, axis=-2)
+
+
+def ssd_quadratic(x, dt, a_log, bmat, cmat) -> jax.Array:
+    """Dense semiseparable form. x:(B,S,H,P) dt:(B,S,H) a_log:(H,)
+    bmat/cmat:(B,S,G,N). Returns (B,S,H,P)."""
+    bsz, s, h, p = x.shape
+    g = bmat.shape[2]
+    rep = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))          # (H,) negative
+    da = dt.astype(jnp.float32) * a                  # (B,S,H)
+    cum = jnp.cumsum(da, axis=1)                     # (B,S,H)
+    # L[i,j] = exp(cum_i - cum_j), i >= j. Mask the EXPONENT (not the
+    # product): exp of masked entries can overflow to inf and 0·inf → NaN
+    # in the backward pass.
+    diff = cum[:, :, None, :] - cum[:, None, :, :]   # (B,S,S,H)
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    L = jnp.exp(jnp.where(mask[None, :, :, None], diff, -1e30))
+    bh = jnp.repeat(bmat, rep, axis=2).astype(jnp.float32)  # (B,S,H,N)
+    ch = jnp.repeat(cmat, rep, axis=2).astype(jnp.float32)
+    scores = jnp.einsum("bihn,bjhn->bijh", ch, bh)   # (B,S,S,H)
+    kernel = scores * L
+    xdt = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+    y = jnp.einsum("bijh,bjhp->bihp", kernel, xdt)
+    return y.astype(x.dtype)
+
+
+def ssd_chunked(x, dt, a_log, bmat, cmat, chunk: int,
+                h0: Optional[jax.Array] = None,
+                return_state: bool = False):
+    """Chunked SSD. Shapes as ssd_quadratic; S % chunk == 0.
+
+    ``h0`` (B,H,N,P) optional incoming state; ``return_state`` also returns
+    the final state (for prefill→decode handoff).
+    """
+    bsz, s, h, p = x.shape
+    g = bmat.shape[2]
+    n = bmat.shape[3]
+    rep = h // g
+    q = chunk
+    nc = s // q
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    f32 = jnp.float32
+
+    from repro.sharding.context import shard_ssd_chunks
+    xc = shard_ssd_chunks(x.astype(f32).reshape(bsz, nc, q, h, p))
+    dtc = shard_ssd_chunks(dt.astype(f32).reshape(bsz, nc, q, h))
+    bc = shard_ssd_chunks(
+        jnp.repeat(bmat, rep, axis=2).astype(f32).reshape(bsz, nc, q, h, n))
+    cc = shard_ssd_chunks(
+        jnp.repeat(cmat, rep, axis=2).astype(f32).reshape(bsz, nc, q, h, n))
+
+    da = dtc * a                                     # (B,nc,Q,H)
+    cum = jnp.cumsum(da, axis=2)                     # within-chunk cumsum
+    total = cum[:, :, -1:, :]                        # (B,nc,1,H)
+
+    # --- intra-chunk (quadratic within chunk) ---
+    # Mask the exponent, not the product (0·inf → NaN in backward).
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((q, q), dtype=bool))
+    L = jnp.exp(jnp.where(mask[None, None, :, :, None], diff, -1e30))
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", cc, bc)
+    xdt = xc * dtc[..., None]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores * L, xdt)
+
+    # --- chunk states ---
+    from repro.sharding.context import shard_ssd_states
+    decay_to_end = jnp.exp(total - cum)              # (B,nc,Q,H)
+    s_c = jnp.einsum("bcqhn,bcqhp->bchnp", bc * (decay_to_end * dtc)[..., None],
+                     xc)                             # (B,nc,H,N,P)
+    s_c = shard_ssd_states(s_c, h_axis=2)
+    chunk_decay = jnp.exp(total[:, :, 0, :])         # (B,nc,H)
+
+    # --- inter-chunk associative scan: H_c = d_c · H_{c-1} + S_c ---
+    def combine(left, right):
+        d1, s1 = left
+        d2, s2 = right
+        return d1 * d2, s1 * d2[..., None, None] + s2
+
+    d_seq = jnp.moveaxis(chunk_decay, 1, 0)          # (nc,B,H)
+    s_seq = shard_ssd_states(jnp.moveaxis(s_c, 1, 0), h_axis=2)
+    if h0 is not None:
+        # Fold the incoming state into the first chunk's emitted state.
+        d_seq = jnp.concatenate([jnp.ones_like(d_seq[:1]), d_seq], axis=0)
+        s_seq = jnp.concatenate([h0.astype(f32)[None], s_seq], axis=0)
+    dd, hh = jax.lax.associative_scan(combine, (d_seq, s_seq), axis=0)
+    if h0 is not None:
+        hh = hh[1:]
+    # states *entering* each chunk: shift right, zero (or h0) first.
+    first = (h0.astype(f32) if h0 is not None
+             else jnp.zeros_like(hh[0]))
+    h_prev = jnp.concatenate([first[None], hh[:-1]], axis=0)
+    h_prev = jnp.moveaxis(h_prev, 0, 1)              # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcqhn,bchnp->bcqhp",
+                         cc * jnp.exp(cum)[..., None], h_prev)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p).astype(x.dtype)
+    if return_state:
+        final = jnp.moveaxis(hh[-1:], 0, 1)[:, 0]    # (B,H,N,P)
+        return y, final.astype(x.dtype)
+    return y
+
+
+def ssd(x, dt, a_log, bmat, cmat, cfg: SSMConfig) -> jax.Array:
+    s = x.shape[1]
+    q = min(cfg.chunk, s)
+    mode = cfg.ssd_mode
+    if mode == "auto":
+        mode = select_ssd_mode(
+            s, cfg.d_state, cfg.head_dim, q,
+            heads=cfg.n_heads, discriminant=cfg.discriminant)
+    if mode == "quadratic" or s % q != 0:
+        return ssd_quadratic(x, dt, a_log, bmat, cmat)
+    return ssd_chunked(x, dt, a_log, bmat, cmat, q)
+
+
+# ------------------------------------------------------------- the block ---
+
+def init(key: jax.Array, cfg: SSMConfig, dtype=jnp.float32
+         ) -> Tuple[Params, Axes]:
+    kin, kout, kdt, kconv = jax.random.split(key, 4)
+    d = cfg.d_model
+    di = cfg.d_inner
+    gn = cfg.n_groups * cfg.d_state
+    proj_out = 2 * di + 2 * gn + cfg.n_heads
+    conv_ch = di + 2 * gn
+
+    p: Params = {}
+    a: Axes = {}
+    p["in_proj"], a["in_proj"] = dense_init(
+        kin, d, proj_out, ("embed", "inner"), dtype)
+    p["out_proj"], a["out_proj"] = dense_init(
+        kout, di, d, ("inner", "embed"), dtype)
+    p["conv_w"] = jax.random.normal(
+        kconv, (cfg.conv_kernel, conv_ch), dtype) * (cfg.conv_kernel ** -0.5)
+    a["conv_w"] = ("conv_k", "inner")
+    p["conv_b"] = jnp.zeros((conv_ch,), dtype)
+    a["conv_b"] = ("inner",)
+    p["a_log"] = jnp.log(jnp.linspace(1.0, 16.0, cfg.n_heads).astype(dtype))
+    a["a_log"] = ("heads",)
+    p["dt_bias"] = jnp.log(jnp.expm1(
+        jnp.exp(jax.random.uniform(
+            kdt, (cfg.n_heads,), dtype,
+            minval=math.log(1e-3), maxval=math.log(1e-1)))))
+    a["dt_bias"] = ("heads",)
+    p["d_skip"] = jnp.ones((cfg.n_heads,), dtype)
+    a["d_skip"] = ("heads",)
+    p["norm"], a["norm"] = layers.rmsnorm_init(di, dtype)
+    return p, a
+
+
+def _causal_conv(seq: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv. seq (B,S,C), w (K,C). ``prev`` (B,K-1,C)
+    supplies left context for decode."""
+    k = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((seq.shape[0], k - 1, seq.shape[2]), seq.dtype)
+    full = jnp.concatenate([prev, seq], axis=1)
+    out = jnp.zeros_like(seq, dtype=jnp.float32)
+    for i in range(k):
+        out = out + full[:, i:i + seq.shape[1], :].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(seq.dtype)
+
+
+def _split_proj(cfg: SSMConfig, zxbcdt: jax.Array):
+    di, gn, h = cfg.d_inner, cfg.n_groups * cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * gn]
+    dt = zxbcdt[..., di + di + 2 * gn:]
+    return z, xbc, dt
+
+
+def apply_train(params: Params, cfg: SSMConfig, u: jax.Array) -> jax.Array:
+    """u: (B, S, d_model) → (B, S, d_model)."""
+    bsz, s, _ = u.shape
+    zxbcdt = dense(params["in_proj"], u)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"], params["conv_b"]))
+    di, gn = cfg.d_inner, cfg.n_groups * cfg.d_state
+    x = xbc[..., :di].reshape(bsz, s, cfg.n_heads, cfg.head_dim)
+    bmat = xbc[..., di:di + gn].reshape(bsz, s, cfg.n_groups, cfg.d_state)
+    cmat = xbc[..., di + gn:].reshape(bsz, s, cfg.n_groups, cfg.d_state)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    y = ssd(x, dt, params["a_log"], bmat, cmat, cfg)
+    y = y + x * params["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, di)
+    y = layers.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return dense(params["out_proj"], y)
+
+
+def init_cache(cfg: SSMConfig, batch: int, dtype=jnp.bfloat16) -> SSMCache:
+    conv_ch = cfg.d_inner + 2 * cfg.n_groups * cfg.d_state
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.conv_kernel - 1, conv_ch), dtype),
+        state=jnp.zeros(
+            (batch, cfg.n_heads, cfg.d_state, cfg.head_dim), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def apply_prefill(params: Params, cfg: SSMConfig, u: jax.Array,
+                  cache: SSMCache) -> Tuple[jax.Array, SSMCache]:
+    bsz, s, _ = u.shape
+    zxbcdt = dense(params["in_proj"], u)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    conv_tail = xbc[:, -(cfg.conv_kernel - 1):, :]
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"], params["conv_b"]))
+    di, gn = cfg.d_inner, cfg.n_groups * cfg.d_state
+    x = xbc[..., :di].reshape(bsz, s, cfg.n_heads, cfg.head_dim)
+    bmat = xbc[..., di:di + gn].reshape(bsz, s, cfg.n_groups, cfg.d_state)
+    cmat = xbc[..., di + gn:].reshape(bsz, s, cfg.n_groups, cfg.d_state)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    y, final = ssd_chunked(x, dt, params["a_log"], bmat, cmat,
+                           min(cfg.chunk, s), return_state=True)
+    y = y + x * params["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, di)
+    y = layers.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = dense(params["out_proj"], y)
+    return out, SSMCache(conv=conv_tail.astype(cache.conv.dtype),
+                         state=final.astype(cache.state.dtype),
+                         length=jnp.asarray(s, jnp.int32))
+
+
+def apply_decode(params: Params, cfg: SSMConfig, u: jax.Array,
+                 cache: SSMCache) -> Tuple[jax.Array, SSMCache]:
+    """One-token step: O(1) in sequence length — why the SSM archs run the
+    long_500k cell that dense attention cannot."""
+    bsz, s1, _ = u.shape
+    assert s1 == 1
+    zxbcdt = dense(params["in_proj"], u)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    new_conv = jnp.concatenate(
+        [cache.conv, xbc.astype(cache.conv.dtype)], axis=1)[:, 1:, :]
+    xbc = jax.nn.silu(_causal_conv(
+        xbc, params["conv_w"], params["conv_b"],
+        prev=cache.conv.astype(xbc.dtype)))
+    di, gn = cfg.d_inner, cfg.n_groups * cfg.d_state
+    x = xbc[..., :di].reshape(bsz, cfg.n_heads, cfg.head_dim)
+    bmat = xbc[..., di:di + gn].reshape(bsz, cfg.n_groups, cfg.d_state)
+    cmat = xbc[..., di + gn:].reshape(bsz, cfg.n_groups, cfg.d_state)
+    rep = cfg.n_heads // cfg.n_groups
+    bh = jnp.repeat(bmat, rep, axis=1).astype(jnp.float32)  # (B,H,N)
+    ch = jnp.repeat(cmat, rep, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        dt_raw[:, 0].astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32))             # (B,H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))        # (H,)
+    decay = jnp.exp(dt * a)                                  # (B,H)
+    xf = x.astype(jnp.float32)
+    upd = jnp.einsum("bhn,bhp->bhnp", bh * dt[..., None], xf)
+    state = cache.state.astype(jnp.float32) * decay[..., None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", ch, state)               # (B,H,P)
+    y = y + xf * params["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, 1, di).astype(u.dtype)
+    y = layers.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = dense(params["out_proj"], y)
+    return out, SSMCache(conv=new_conv,
+                         state=state.astype(cache.state.dtype),
+                         length=cache.length + 1)

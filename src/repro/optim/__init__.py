@@ -1,0 +1,8 @@
+"""Optimizer stack (from scratch — no optax in this environment):
+AdamW, Muon (Newton-Schulz over the paper's AA^TB expression, association
+chosen by the LAMP discriminant), LR schedules, int8 error-feedback
+gradient compression."""
+
+from . import adamw, grad_compress, muon, schedule
+
+__all__ = ["adamw", "grad_compress", "muon", "schedule"]

@@ -1,0 +1,62 @@
+"""AdamW from scratch (no optax in this environment).
+
+Mixed-precision discipline: fp32 master params + fp32 moments regardless of
+compute dtype; the train step casts a bf16 working copy for the forward/
+backward. State is a plain pytree so the checkpoint store and the
+ZeRO-style sharding rules (optimizer state sharded like params over the
+``data`` axis) apply uniformly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def init(params: Any) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                         params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def update(
+    grads: Any,
+    state: AdamWState,
+    params: Any,
+    lr: jax.Array,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+) -> Tuple[Any, AdamWState]:
+    """Returns (new_params, new_state). Global-norm clipping included."""
+    step = state.step + 1
+    gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if grad_clip > 0:
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(gf)))
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+        gf = jax.tree.map(lambda g: g * scale, gf)
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, gf)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, gf)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        wd = weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        return (p.astype(jnp.float32) - lr * (delta + wd)).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(step=step, mu=mu, nu=nu)

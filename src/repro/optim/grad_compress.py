@@ -1,0 +1,82 @@
+"""Int8 error-feedback gradient compression for cross-pod all-reduce.
+
+At 2×16×16 scale the cross-pod (DCN) all-reduce is the narrowest pipe;
+compressing pod-boundary gradient traffic 4× (bf16→int8 blockwise) moves
+the collective roofline term directly. Error feedback (Seide et al.;
+Karimireddy et al.) keeps the quantization noise from biasing convergence:
+the residual of each quantization is added back before the next one.
+
+Usage inside the train step::
+
+    comp, state = compress(grads, state)          # int8 + scales
+    comp = lax.pmean(comp, axis_name="pod")        # cheap collective
+    grads = decompress(comp)
+
+The compression is blockwise-symmetric per 256-element block (last axis),
+matching TPU lane width; scales are fp32.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+class Compressed(NamedTuple):
+    q: jax.Array        # int8, padded to block multiple
+    scale: jax.Array    # fp32 per block
+    shape: Tuple[int, ...]
+
+
+class EFState(NamedTuple):
+    residual: Any       # same pytree as grads, fp32
+
+
+def init_state(grads: Any) -> EFState:
+    return EFState(residual=jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads))
+
+
+def _compress_leaf(g: jax.Array, r: jax.Array
+                   ) -> Tuple[Compressed, jax.Array]:
+    x = g.astype(jnp.float32) + r
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)
+    deq = deq[: x.size].reshape(x.shape)
+    new_r = x - deq
+    return Compressed(q=q, scale=scale[:, 0], shape=tuple(g.shape)), new_r
+
+
+def compress(grads: Any, state: EFState) -> Tuple[Any, EFState]:
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(state.residual)
+    comp, res = [], []
+    for g, r in zip(flat_g, flat_r):
+        c, nr = _compress_leaf(g, r)
+        comp.append(c)
+        res.append(nr)
+    return (treedef.unflatten(comp),
+            EFState(residual=treedef.unflatten(res)))
+
+
+def _decompress_leaf(c: Compressed) -> jax.Array:
+    deq = (c.q.astype(jnp.float32) * c.scale[:, None]).reshape(-1)
+    n = 1
+    for d in c.shape:
+        n *= d
+    return deq[:n].reshape(c.shape)
+
+
+def decompress(comp: Any) -> Any:
+    return jax.tree.map(_decompress_leaf, comp,
+                        is_leaf=lambda x: isinstance(x, Compressed))

@@ -1,0 +1,36 @@
+"""LR schedules (warmup + cosine / linear / constant) as pure functions of
+the step — jit-safe, checkpoint-free."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = peak_lr * s / max(1, warmup)
+    t = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(s < warmup, warm, cos)
+
+
+def warmup_linear(step, peak_lr: float, warmup: int, total: int):
+    s = step.astype(jnp.float32)
+    warm = peak_lr * s / max(1, warmup)
+    t = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+    return jnp.where(s < warmup, warm, peak_lr * (1 - t))
+
+
+def constant(step, peak_lr: float, warmup: int = 0, total: int = 0):
+    s = step.astype(jnp.float32)
+    if warmup:
+        return jnp.minimum(peak_lr, peak_lr * s / warmup)
+    return jnp.full_like(s, peak_lr)
+
+
+SCHEDULES = {
+    "cosine": warmup_cosine,
+    "linear": warmup_linear,
+    "constant": constant,
+}

@@ -1,0 +1,8 @@
+"""Runtime supervision: bounded-restart supervisor, straggler monitor,
+heartbeat failure detection."""
+
+from . import supervisor
+from .supervisor import Heartbeat, RestartPolicy, StragglerMonitor, Supervisor
+
+__all__ = ["supervisor", "Heartbeat", "RestartPolicy", "StragglerMonitor",
+           "Supervisor"]

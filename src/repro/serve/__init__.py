@@ -1,0 +1,5 @@
+"""Serving substrate: KV/SSM cache decode steps + generation loop."""
+
+from . import decode
+
+__all__ = ["decode"]

@@ -1,0 +1,13 @@
+"""Sharding policy: logical-axis rules -> PartitionSpecs (DP/TP/EP/FSDP)."""
+
+from .rules import (
+    DEFAULT_RULES,
+    batch_spec,
+    params_specs,
+    replicated,
+    shardings_of,
+    spec_for,
+)
+
+__all__ = ["DEFAULT_RULES", "batch_spec", "params_specs", "replicated",
+           "shardings_of", "spec_for"]

@@ -1,0 +1,149 @@
+"""Activation-sharding context: sequence parallelism without touching
+model code signatures.
+
+The launcher (dry-run / trainer) activates a context naming the mesh and
+batch axes; model code calls :func:`shard_seq` / :func:`shard_logits` at
+the residual stream and LM head. Inside the context these lower to
+``with_sharding_constraint`` — GSPMD then keeps the carried activations
+sequence-sharded over the ``model`` axis between blocks (Megatron-style
+sequence parallelism: norms/residuals run S/model-sharded; the attention
+and MLP projections transition via all-gather/reduce-scatter pairs that
+GSPMD inserts). Outside the context they are identity, so single-host
+tests and examples see no constraints.
+
+Memory effect (glm4 train_4k cell): the per-device residual carried
+through the layer scan drops model_axis-fold (16×) — the difference
+between a 190 GiB and a <16 GiB HBM footprint.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ctx = threading.local()
+
+
+def _state():
+    if not hasattr(_ctx, "mesh"):
+        _ctx.mesh = None
+        _ctx.batch_axes = None
+        _ctx.heads_enabled = True
+    return _ctx
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, batch_axes=None, heads: bool = True):
+    """``heads=False`` disables the in-attention head constraints only:
+    XLA's SPMD partitioner has a pathological compile-time path for the
+    head-layout transitions on 3-axis (pod) meshes on the CPU backend —
+    multi-pod dry-runs prove compilation with the propagated layout
+    instead (single-pod keeps the optimized Megatron layout; documented
+    in EXPERIMENTS.md §Dry-run)."""
+    st = _state()
+    prev = (st.mesh, st.batch_axes, getattr(st, "heads_enabled", True))
+    if batch_axes is None:
+        axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        batch_axes = axes if len(axes) > 1 else (axes[0] if axes else None)
+    st.mesh, st.batch_axes = mesh, batch_axes
+    st.heads_enabled = heads
+    try:
+        yield
+    finally:
+        st.mesh, st.batch_axes, st.heads_enabled = prev
+
+
+def _axsize(mesh, axis) -> int:
+    import math
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return math.prod(mesh.shape[a] for a in axis)
+    return mesh.shape[axis]
+
+
+def _constrain(x, spec_entries):
+    st = _state()
+    if st.mesh is None:
+        return x
+    entries = []
+    for dim, ax in zip(x.shape, spec_entries):
+        size = _axsize(st.mesh, ax)
+        entries.append(ax if (ax is not None and dim % size == 0
+                              and dim >= size) else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(st.mesh, P(*entries)))
+
+
+def shard_seq(x):
+    """(B, S, d) residual: batch over (pod,data), sequence over model."""
+    st = _state()
+    if st.mesh is None or x.ndim != 3:
+        return x
+    return _constrain(x, (st.batch_axes, "model", None))
+
+
+def shard_logits(x):
+    """(B, S, V) logits: batch over (pod,data), vocab over model."""
+    st = _state()
+    if st.mesh is None or x.ndim != 3:
+        return x
+    return _constrain(x, (st.batch_axes, None, "model"))
+
+
+def shard_tokens_hidden(x):
+    """(T, d) flattened token activations (MoE internals)."""
+    st = _state()
+    if st.mesh is None or x.ndim != 2:
+        return x
+    return _constrain(x, (st.batch_axes, None))
+
+
+def shard_moe_groups(x):
+    """(G, Tg, d) grouped MoE token blocks: groups over the batch axes."""
+    st = _state()
+    if st.mesh is None or x.ndim != 3:
+        return x
+    return _constrain(x, (st.batch_axes, None, None))
+
+
+def shard_heads(x):
+    """(B, S, H, Dh) attention tensors: heads over model, full sequence —
+    the Megatron TP layout inside the attention block. Combined with the
+    S-sharded residual (shard_seq), GSPMD inserts the canonical
+    all-gather(S) on entry / reduce-scatter(S) on exit instead of
+    full-activation all-reduces (§Perf hillclimb 2)."""
+    st = _state()
+    if st.mesh is None or x.ndim != 4 or not getattr(
+            st, "heads_enabled", True):
+        return x
+    return _constrain(x, (st.batch_axes, None, "model", None))
+
+
+def shard_ssd_chunks(x):
+    """(B, nc, Q, ...) SSD chunk tensors: batch over (pod,data), chunk
+    axis over model — keeps the O(nc·Q²·H) intra-chunk working set
+    model-sharded through the SSD layer (mamba2 §Perf hillclimb)."""
+    st = _state()
+    if st.mesh is None or x.ndim < 3:
+        return x
+    spec = (st.batch_axes, "model") + (None,) * (x.ndim - 2)
+    return _constrain(x, spec)
+
+
+def shard_ssd_states(x, h_axis: int):
+    """SSD inter-chunk states: shard the heads axis over model. The
+    chunk-state tensors (B, nc, H, N, P) are the largest live set of the
+    chunked SSD backward (≈ nc·H·N·P floats per sequence) and the
+    associative scan over chunks is elementwise in H — head sharding is
+    free parallelism there (mamba2 §Perf hillclimb, iteration 2)."""
+    st = _state()
+    if st.mesh is None:
+        return x
+    spec = [None] * x.ndim
+    spec[h_axis] = "model"
+    return _constrain(x, tuple(spec))

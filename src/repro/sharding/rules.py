@@ -1,0 +1,141 @@
+"""Logical-axis → mesh-axis sharding rules.
+
+Model code annotates every parameter with logical axis names
+(``("embed", "ffn")`` etc. — see models/layers.py); this module turns those
+into concrete ``PartitionSpec``s for a given mesh, applying:
+
+  * **TP** — ``ffn``/``heads``/``kv_heads``/``inner``/``vocab`` →  ``model``
+  * **EP** — ``experts`` → ``model`` (expert parallelism shares the TP axis;
+    within an expert the ffn axis is then unsharded)
+  * **FSDP/ZeRO-3** — ``embed`` → ``data`` (+ ``pod``): parameters and
+    optimizer state sharded over the data axes, all-gathered per layer by
+    GSPMD. This is what makes arctic-480b's optimizer state fit.
+  * divisibility guard — an axis is only sharded if its size divides the
+    mesh axis size; otherwise it stays replicated (e.g. whisper's 6 heads
+    on a 16-wide model axis: the fused head*dim columns shard instead).
+
+Batch/sequence rules for activations live in ``input_specs`` (launch/).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis → preferred mesh axes, in priority order. The special axis
+# name tuples ("pod","data") merge into one sharding tuple entry.
+DEFAULT_RULES: Dict[str, Any] = {
+    "vocab": "model",
+    "embed": ("pod", "data"),   # FSDP
+    "ffn": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "inner": "model",
+    "experts": "model",
+    "layers": None,             # scan axis — never sharded
+    "conv_k": None,
+}
+
+# ZeRO-1: parameters replicated across the data axes (TP-sharding only);
+# optimizer moments keep the DEFAULT_RULES (data-sharded). Removes the
+# per-layer FSDP parameter all-gathers — the right trade whenever the
+# TP-sharded fp32 params + grads fit in HBM (§Perf hillclimb; selection is
+# the paper's discriminant applied to distribution algorithms).
+ZERO1_PARAM_RULES: Dict[str, Any] = dict(DEFAULT_RULES, embed=None)
+
+
+def pick_param_policy(n_params: int, mesh, hbm_bytes: int = 16 * 2 ** 30,
+                      dtype_bytes: int = 4) -> str:
+    """``auto`` policy: zero1 iff fp32 params + fp32 grads on one TP shard
+    stay under half the HBM budget (leaving room for moments slices,
+    bf16 working copies and activations)."""
+    tp = int(mesh.shape.get("model", 1))
+    per_dev = n_params * dtype_bytes * 2 / tp      # params + grads
+    return "zero1" if per_dev <= hbm_bytes / 2 else "fsdp"
+
+
+def rules_for(policy: str) -> Dict[str, Any]:
+    if policy == "zero1":
+        return ZERO1_PARAM_RULES
+    return DEFAULT_RULES
+
+
+def _mesh_axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(
+            __import__("math").prod(
+                mesh.shape[a] for a in axis if a in mesh.shape))
+    return int(mesh.shape.get(axis, 1))
+
+
+def _present(mesh: Mesh, axis):
+    """Filter rule axes down to those present in the mesh."""
+    if axis is None:
+        return None
+    if isinstance(axis, tuple):
+        axes = tuple(a for a in axis if a in mesh.shape)
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+    return axis if axis in mesh.shape else None
+
+
+def spec_for(axes: Tuple[str, ...], shape: Tuple[int, ...], mesh: Mesh,
+             rules: Optional[Dict[str, Any]] = None) -> P:
+    """PartitionSpec for one array given its logical axes and shape."""
+    rules = rules or DEFAULT_RULES
+    used = set()
+    entries = []
+    for name, dim in zip(axes, shape):
+        target = _present(mesh, rules.get(name))
+        size = _mesh_axis_size(mesh, target)
+        flat = (target if isinstance(target, tuple)
+                else (target,) if target else ())
+        if (target is None or dim % max(size, 1) != 0
+                or any(a in used for a in flat)):
+            entries.append(None)
+        else:
+            entries.append(target)
+            used.update(flat)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def params_specs(axes_tree: Any, params_shapes: Any, mesh: Mesh,
+                 rules: Optional[Dict[str, Any]] = None) -> Any:
+    """PartitionSpec pytree matching a params pytree.
+
+    ``axes_tree`` — logical-axis pytree from model init;
+    ``params_shapes`` — params pytree (arrays or ShapeDtypeStructs).
+    """
+    def is_axes_leaf(x):
+        return isinstance(x, tuple) and all(isinstance(s, str) for s in x)
+
+    flat_axes = jax.tree.flatten(axes_tree, is_leaf=is_axes_leaf)
+    flat_shapes = jax.tree.flatten(params_shapes)
+    specs = [
+        spec_for(a, tuple(s.shape), mesh, rules)
+        for a, s in zip(flat_axes[0], flat_shapes[0])
+    ]
+    return jax.tree.unflatten(flat_shapes[1], specs)
+
+
+def shardings_of(specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """Data-parallel batch sharding over (pod, data)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return P(axes if len(axes) > 1 else (axes[0] if axes else None))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,6 @@
+"""Training loop substrate: jitted train step (grad accumulation, mixed
+precision, remat) + checkpointed training loop."""
+
+from . import train_step
+
+__all__ = ["train_step"]

@@ -1,0 +1,96 @@
+"""Checkpointed training loop: data prefetch → jitted step → async save.
+
+Integrates every fault-tolerance substrate:
+  * restore-from-latest on entry (so a Supervisor restart resumes),
+  * async checkpoint every ``save_every`` steps + retention,
+  * SIGTERM preemption → save + clean exit,
+  * straggler monitor on step wall times,
+  * deterministic data: batch index = restored step (pipeline.py contract).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import Prefetcher
+from repro.models.transformer import ModelConfig
+from repro.runtime.supervisor import StragglerMonitor
+from repro.train.train_step import TrainState, make_train_state, make_train_step
+
+
+def train(
+    cfg: ModelConfig,
+    source,                       # data source with .batch_at(step)
+    total_steps: int,
+    *,
+    ckpt_dir: Optional[str] = None,
+    save_every: int = 50,
+    keep: int = 3,
+    optimizer: str = "adamw",
+    peak_lr: float = 3e-4,
+    warmup: int = 20,
+    log_every: int = 10,
+    seed: int = 0,
+    mesh=None,
+    donate: bool = True,
+    fail_at_step: Optional[int] = None,   # test hook: inject a crash
+    log_fn: Callable[[str], None] = print,
+) -> TrainState:
+    state, axes = make_train_state(jax.random.PRNGKey(seed), cfg,
+                                   optimizer=optimizer)
+    mgr = CheckpointManager(ckpt_dir, keep=keep) if ckpt_dir else None
+    start_step = 0
+    if mgr is not None:
+        latest = mgr.latest_step()
+        if latest is not None:
+            state = mgr.restore(state, step=latest, mesh=mesh)
+            start_step = int(jax.device_get(state.step))
+            log_fn(f"[train] restored checkpoint at step {start_step}")
+        mgr.install_sigterm_hook()
+
+    step_fn = jax.jit(
+        make_train_step(cfg, optimizer=optimizer, peak_lr=peak_lr,
+                        warmup=warmup, total_steps=total_steps),
+        donate_argnums=(0,) if donate else (),
+    )
+    monitor = StragglerMonitor()
+    prefetch = Prefetcher(source, start_step=start_step)
+    try:
+        for step in range(start_step, total_steps):
+            bstep, np_batch = next(prefetch)
+            assert bstep == step, (bstep, step)
+            batch = {k: jnp.asarray(v) for k, v in np_batch.items()}
+            t0 = time.perf_counter()
+            state, metrics = step_fn(state, batch)
+            metrics = jax.device_get(metrics)
+            wall = time.perf_counter() - t0
+            slow = monitor.observe(step, wall)
+            if step % log_every == 0 or step == total_steps - 1:
+                log_fn(f"[train] step={step} loss={metrics['loss']:.4f} "
+                       f"lr={metrics['lr']:.2e} "
+                       f"gnorm={metrics['grad_norm']:.3f} "
+                       f"wall={wall*1e3:.0f}ms"
+                       + (" [straggler]" if slow else ""))
+            if fail_at_step is not None and step == fail_at_step:
+                raise RuntimeError(f"injected failure at step {step}")
+            want_save = mgr is not None and (
+                (step + 1) % save_every == 0
+                or step == total_steps - 1
+                or mgr.preempted.is_set())
+            if want_save:
+                mgr.save(int(jax.device_get(state.step)), state, mesh=mesh)
+            if mgr is not None and mgr.preempted.is_set():
+                log_fn(f"[train] preempted at step {step}; "
+                       "checkpoint saved, exiting")
+                break
+        if mgr is not None:
+            mgr.wait()
+        return state
+    finally:
+        prefetch.close()

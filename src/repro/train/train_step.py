@@ -1,0 +1,115 @@
+"""The jitted training step: loss → grad → (optional accumulation,
+compression) → optimizer update.
+
+This function is what the multi-pod dry-run lowers: its HLO carries the
+full collective schedule (gradient reduce across data/pod axes is implicit
+in GSPMD's partitioning of the batch dimension; FSDP parameter all-gathers
+come from the ``embed→data`` sharding rule).
+
+Microbatching: ``accum_steps > 1`` splits the local batch and accumulates
+grads in fp32 with a ``lax.scan`` (sequential; memory-bound shapes get the
+remat+accum combination).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.models.transformer import ModelConfig
+from repro.optim import adamw, muon, schedule as sched
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any                 # AdamWState | MuonState
+    step: jax.Array
+
+
+def make_train_state(key, cfg: ModelConfig, optimizer: str = "adamw",
+                     dtype=jnp.float32) -> Tuple[TrainState, Any]:
+    params, axes = api.init(key, cfg, dtype)
+    opt = muon.init(params) if optimizer == "muon" else adamw.init(params)
+    return TrainState(params=params, opt=opt,
+                      step=jnp.zeros((), jnp.int32)), axes
+
+
+def _grads(cfg: ModelConfig, params, batch, accum_steps: int,
+           compute_dtype):
+    """Value-and-grad with optional microbatch accumulation."""
+    cparams = jax.tree.map(
+        lambda p: p.astype(compute_dtype)
+        if p.dtype == jnp.float32 and p.ndim >= 2 else p, params)
+
+    def loss_of(p, b):
+        return api.loss_fn(p, cfg, b)
+
+    if accum_steps <= 1:
+        (loss, metrics), g = jax.value_and_grad(
+            loss_of, has_aux=True)(cparams, batch)
+        return loss, metrics, g
+
+    def split(b):
+        return jax.tree.map(
+            lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                + x.shape[1:]), b)
+
+    micro = split(batch)
+    zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), cparams)
+
+    def body(carry, mb):
+        acc, ls = carry
+        (loss, metrics), g = jax.value_and_grad(
+            loss_of, has_aux=True)(cparams, mb)
+        acc = jax.tree.map(
+            lambda a, x: a + x.astype(jnp.float32) / accum_steps, acc, g)
+        return (acc, ls + loss / accum_steps), metrics
+
+    (g, loss), metrics = jax.lax.scan(
+        body, (zero, jnp.zeros((), jnp.float32)), micro)
+    metrics = jax.tree.map(lambda m: m[-1], metrics)
+    return loss, metrics, g
+
+
+def train_step(
+    state: TrainState,
+    batch: Dict[str, jax.Array],
+    *,
+    cfg: ModelConfig,
+    optimizer: str = "adamw",
+    peak_lr: float = 3e-4,
+    warmup: int = 100,
+    total_steps: int = 10000,
+    schedule: str = "cosine",
+    accum_steps: int = 1,
+    compute_dtype=jnp.bfloat16,
+    weight_decay: float = 0.1,
+) -> Tuple[TrainState, Dict[str, jax.Array]]:
+    loss, metrics, grads = _grads(cfg, state.params, batch, accum_steps,
+                                  compute_dtype)
+    lr = sched.SCHEDULES[schedule](state.step, peak_lr, warmup, total_steps)
+    if optimizer == "muon":
+        new_params, new_opt = muon.update(
+            grads, state.opt, state.params, lr, weight_decay=weight_decay)
+    else:
+        new_params, new_opt = adamw.update(
+            grads, state.opt, state.params, lr, weight_decay=weight_decay)
+    gnorm = jnp.sqrt(sum(
+        jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads)))
+    out_metrics = {
+        "loss": loss.astype(jnp.float32),
+        "lr": lr,
+        "grad_norm": gnorm,
+        **{k: v.astype(jnp.float32) for k, v in metrics.items()},
+    }
+    return TrainState(params=new_params, opt=new_opt,
+                      step=state.step + 1), out_metrics
+
+
+def make_train_step(cfg: ModelConfig, **kw):
+    """Bind static config; returns fn(state, batch) suitable for jax.jit."""
+    return functools.partial(train_step, cfg=cfg, **kw)

@@ -1,0 +1,235 @@
+"""Core LAMP planner: enumeration, FLOP counts, anomaly machinery."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    GRAM_AATB,
+    MATRIX_CHAIN_ABCD,
+    AnalyticalTPUProfile,
+    BlasRunner,
+    TableProfile,
+    classify,
+    enumerate_algorithms,
+    gram_times,
+    matrix_chain,
+    measure_instance,
+    optimal_chain_order,
+    plan,
+    predict_algorithm_time,
+    scan_line,
+)
+from repro.core.flops import gemm, symm, syrk, tri2full
+
+
+# ----------------------------------------------------------- enumeration --
+
+def test_abcd_has_six_algorithms():
+    """Paper §3.2.1: 3! = 6 orderings for the 4-operand chain."""
+    algos = enumerate_algorithms(matrix_chain(100, 200, 50, 300, 80))
+    assert len(algos) == 6
+    assert all(len(a.calls) == 3 for a in algos)
+    assert all(c.kind == "gemm" for a in algos for c in a.calls)
+
+
+def test_abcd_flop_formulas_match_paper():
+    """Paper's six FLOP-count formulas, checked exhaustively."""
+    d = (101, 203, 57, 311, 83)
+    algos = enumerate_algorithms(matrix_chain(*d))
+    d0, d1, d2, d3, d4 = d
+    expected = sorted([
+        2 * d0 * (d1 * d2 + d2 * d3 + d3 * d4),      # alg 1
+        2 * d2 * (d0 * d1 + d0 * d4 + d3 * d4),      # alg 2
+        2 * d3 * (d0 * d1 + d0 * d4 + d1 * d2),      # alg 3
+        2 * d1 * (d0 * d4 + d2 * d3 + d3 * d4),      # alg 4
+        2 * d2 * (d0 * d1 + d0 * d4 + d3 * d4),      # alg 5 (= alg 2)
+        2 * d4 * (d0 * d1 + d1 * d2 + d2 * d3),      # alg 6
+    ])
+    assert sorted(a.flops for a in algos) == expected
+
+
+def test_aatb_has_five_algorithms_with_paper_flops():
+    """Paper §3.2.2: SYRK/SYMM/GEMM variants, five total."""
+    d0, d1, d2 = 120, 260, 70
+    algos = enumerate_algorithms(gram_times(d0, d1, d2))
+    assert len(algos) == 5
+    kinds = sorted(tuple(c.kind for c in a.calls) for a in algos)
+    assert kinds == sorted([
+        ("syrk", "symm"),
+        ("syrk", "tri2full", "gemm"),
+        ("gemm", "symm"),
+        ("gemm", "gemm"),
+        ("gemm", "gemm"),
+    ])
+    fl = sorted(set(a.flops for a in algos))
+    assert fl == sorted({
+        d0 * ((d0 + 1) * d1 + 2 * d0 * d2),   # algs 1, 2
+        2 * d0 * d0 * (d1 + d2),              # algs 3, 4
+        4 * d0 * d1 * d2,                     # alg 5
+    })
+
+
+def test_dp_chain_order_optimal():
+    flops, tree = optimal_chain_order([10, 1000, 10, 1000, 10])
+    # ((A·B)·(C·D)) is wildly suboptimal; (A·B)C then ·D etc — DP must find
+    # the min over all 5 parenthesizations; verify against brute force.
+    algos = enumerate_algorithms(matrix_chain(10, 1000, 10, 1000, 10))
+    assert flops == min(a.flops for a in algos)
+
+
+def test_kernel_flop_conventions():
+    assert gemm(3, 5, 7).flops == 2 * 3 * 5 * 7
+    assert syrk(4, 9).flops == 5 * 4 * 9
+    assert symm(6, 11).flops == 2 * 36 * 11
+    assert tri2full(8).flops == 0
+
+
+# -------------------------------------------------------------- anomaly --
+
+def test_classify_non_anomaly_when_cheapest_is_fastest():
+    c = classify({"a": 1.0, "b": 2.0}, {"a": 10, "b": 20})
+    assert not c.is_anomaly
+    assert c.time_score == 0.0
+
+
+def test_classify_anomaly_with_scores():
+    times = {"cheap": 2.0, "fast": 1.0}
+    flops = {"cheap": 100, "fast": 145}
+    c = classify(times, flops, threshold=0.10)
+    assert c.is_anomaly
+    assert c.cheapest == ("cheap",)
+    assert c.fastest == ("fast",)
+    assert c.time_score == pytest.approx(0.5)
+    assert c.flop_score == pytest.approx(45 / 145)
+
+
+def test_classify_tie_in_flops_not_anomaly_if_any_fast():
+    times = {"a": 2.0, "b": 1.0}
+    flops = {"a": 100, "b": 100}
+    c = classify(times, flops)
+    assert not c.is_anomaly  # cheapest set = {a,b} intersects fastest {b}
+
+
+def test_classify_threshold_suppresses_marginal():
+    times = {"cheap": 1.05, "fast": 1.0}
+    flops = {"cheap": 100, "fast": 150}
+    assert not classify(times, flops, threshold=0.10).is_anomaly
+    assert classify(times, flops, threshold=0.01).is_anomaly
+
+
+def test_scan_line_region_and_holes():
+    # anomalous region = coords [100, 200] with a 1-point hole at 150
+    def classify_at(pt):
+        x = pt[0]
+        anom = 100 <= x <= 200 and x != 150
+        return classify({"c": 2.0 if anom else 1.0, "f": 1.0},
+                        {"c": 10, "f": 20}, threshold=0.1)
+
+    scan = scan_line(classify_at, origin=(140,), dim=0, lo_bound=20,
+                     hi_bound=1200, step=10)
+    assert scan.lo == 100
+    assert scan.hi == 200
+    assert scan.thickness == 101
+
+
+# ------------------------------------------------------------ perfmodel --
+
+def test_analytical_profile_syrk_cheaper_than_gemm():
+    prof = AnalyticalTPUProfile()
+    m, k = 1024, 1024
+    t_syrk = prof.time(syrk(m, k), 2)
+    t_gemm = prof.time(gemm(m, m, k), 2)
+    assert t_syrk < t_gemm  # triangular block grid halves MXU work
+
+
+def test_analytical_profile_quantization_cliff():
+    prof = AnalyticalTPUProfile()
+    # At 128³ the model is overhead/memory-bound; the MXU quantization
+    # cliff shows where compute dominates: 1025³ pays for 1152-padded
+    # tiles (+42 % block work for +0.3 % useful FLOPs).
+    t1024 = prof.time(gemm(1024, 1024, 1024), 2)
+    t1025 = prof.time(gemm(1025, 1025, 1025), 2)
+    assert t1025 > t1024 * 1.25
+
+
+def test_table_profile_exact_and_nn_fallback():
+    prof = TableProfile(peak_flops=1e12)
+    prof.record(gemm(100, 100, 100), 1e-3)
+    assert prof.time(gemm(100, 100, 100)) == 1e-3
+    # unseen shape: nearest neighbour scaled by FLOP ratio
+    t = prof.time(gemm(200, 200, 200))
+    assert t == pytest.approx(8e-3)
+
+
+def test_predict_algorithm_time_additive():
+    prof = TableProfile(peak_flops=1e12)
+    prof.record(syrk(64, 32), 2e-3)
+    prof.record(symm(64, 16), 3e-3)
+    algos = enumerate_algorithms(gram_times(64, 32, 16))
+    a1 = next(a for a in algos if a.name.endswith("[syrk+symm]"))
+    assert predict_algorithm_time(a1.calls, prof) == pytest.approx(5e-3)
+
+
+# ----------------------------------------------------------- execution ---
+
+def test_blas_runner_executes_all_aatb_algorithms_identically():
+    rng = np.random.default_rng(0)
+    runner = BlasRunner(reps=1, flush_cache=False,
+                        rng=np.random.default_rng(1))
+    algos = enumerate_algorithms(gram_times(60, 90, 40))
+    operands = runner.make_operands(algos[0])
+    for a in algos:
+        for kk, vv in runner.make_operands(a).items():
+            operands.setdefault(kk, vv)
+    ref = None
+    for a in algos:
+        out = runner.execute(a, operands)
+        if ref is None:
+            ref = out
+        else:
+            np.testing.assert_allclose(out, ref, rtol=1e-10, atol=1e-8)
+
+
+def test_blas_runner_abcd_algorithms_agree():
+    runner = BlasRunner(reps=1, flush_cache=False)
+    algos = enumerate_algorithms(matrix_chain(30, 50, 20, 60, 40))
+    operands = runner.make_operands(algos[0])
+    ref = None
+    for a in algos:
+        out = runner.execute(a, operands)
+        if ref is None:
+            ref = out
+        else:
+            np.testing.assert_allclose(out, ref, rtol=1e-9, atol=1e-7)
+
+
+def test_measure_instance_returns_consistent_classification():
+    runner = BlasRunner(reps=2, flush_cache=False)
+    inst = measure_instance(GRAM_AATB, (96, 160, 64), runner, threshold=0.1)
+    assert set(inst.times) == set(inst.flops)
+    assert len(inst.times) == 5
+
+
+# -------------------------------------------------------------- planner --
+
+def test_planner_executes_correctly_both_discriminants():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    A = jnp.asarray(rng.standard_normal((96, 160)).astype(np.float32))
+    B = jnp.asarray(rng.standard_normal((96, 48)).astype(np.float32))
+    ref = np.asarray(A @ A.T @ B)
+    for disc in ("flops", "perfmodel"):
+        p = plan(gram_times(96, 160, 48), discriminant=disc)
+        out = np.asarray(p.fn(A, A, B))
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-3)
+
+
+def test_planner_chain_execution():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(1)
+    mats = [jnp.asarray(rng.standard_normal(s).astype(np.float32))
+            for s in [(40, 60), (60, 30), (30, 70), (70, 20)]]
+    p = plan(matrix_chain(40, 60, 30, 70, 20))
+    ref = np.asarray(mats[0] @ mats[1] @ mats[2] @ mats[3])
+    out = np.asarray(p.fn(*mats))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-3)

@@ -1,0 +1,193 @@
+"""Fault tolerance: checkpoint save/restore/resharding, supervisor restart,
+straggler detection, preemption, end-to-end crash-resume training."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, store
+from repro.runtime.supervisor import (
+    Heartbeat,
+    RestartPolicy,
+    StragglerMonitor,
+    Supervisor,
+)
+
+
+def tree_eq(a, b):
+    fa, fb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(fa, fb))
+
+
+# ------------------------------------------------------------- store -----
+
+def test_store_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12).reshape(3, 4),
+            "nested": {"b": jnp.ones((5,), jnp.bfloat16) * 2,
+                       "c": None}}
+    store.save(str(tmp_path), 7, tree)
+    assert store.latest_step(str(tmp_path)) == 7
+    out = store.restore(str(tmp_path), 7, tree)
+    assert tree_eq(tree, out)
+
+
+def test_store_atomicity_tmp_dir_ignored(tmp_path):
+    tree = {"a": jnp.zeros((2,))}
+    store.save(str(tmp_path), 1, tree)
+    # a crashed save leaves a .tmp dir — must not count as a checkpoint
+    os.makedirs(tmp_path / "step_9.tmp")
+    assert store.latest_step(str(tmp_path)) == 1
+    # incomplete dir without manifest also ignored
+    os.makedirs(tmp_path / "step_5")
+    assert store.latest_step(str(tmp_path)) == 1
+
+
+def test_store_integrity_check(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3)}
+    d = store.save(str(tmp_path), 2, tree)
+    # corrupt: replace file with wrong shape
+    np.save(os.path.join(d, "a.npy"), np.zeros((4, 4)))
+    with pytest.raises(ValueError, match="integrity|shape"):
+        store.restore(str(tmp_path), 2, tree)
+
+
+def test_store_retention(tmp_path):
+    tree = {"a": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4):
+        store.save(str(tmp_path), s, tree)
+    store.retain(str(tmp_path), keep=2)
+    left = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert left == ["step_3", "step_4"]
+
+
+def test_elastic_restore_to_different_mesh(tmp_path):
+    """Save on a (2,) data mesh, restore onto (2, 2) data×model — the
+    elastic-scaling path: specs recorded at save time are re-filtered to
+    the new mesh and device_put reshards."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    devs = jax.devices()
+    if len(devs) < 2:
+        pytest.skip("needs >= 2 devices (run under forced host devices)")
+    mesh1 = jax.make_mesh((2,), ("data",),
+                          axis_types=(jax.sharding.AxisType.Auto,))
+    arr = jnp.arange(32, dtype=jnp.float32).reshape(8, 4)
+    sharded = jax.device_put(arr, NamedSharding(mesh1, P("data", None)))
+    tree = {"w": sharded}
+    specs = {"w": P("data", None)}
+    store.save(str(tmp_path), 3, tree, specs=specs,
+               mesh_shape={"data": 2})
+    mesh2 = jax.make_mesh((1, 2), ("data", "model"),
+                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    out = store.restore(str(tmp_path), 3, tree, mesh=mesh2)
+    assert np.array_equal(np.asarray(out["w"]), np.asarray(arr))
+
+
+# ------------------------------------------------------------ manager ----
+
+def test_manager_async_save_and_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"w": jnp.ones((4, 4))}
+    for s in (1, 2, 3):
+        mgr.save(s, jax.tree.map(lambda x: x * s, tree))
+    mgr.wait()
+    assert mgr.latest_step() == 3
+    out = mgr.restore(tree)
+    assert float(np.asarray(out["w"])[0, 0]) == 3.0
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == ["step_2", "step_3"]  # retention
+
+
+def test_manager_preemption_flag(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    assert not mgr.preempted.is_set()
+    mgr.preempted.set()
+    assert mgr.preempted.is_set()
+
+
+# ---------------------------------------------------------- supervisor ---
+
+def test_supervisor_retries_until_success():
+    calls = []
+
+    def flaky(attempt):
+        calls.append(attempt)
+        if attempt < 2:
+            raise RuntimeError("boom")
+        return "done"
+
+    sup = Supervisor(RestartPolicy(max_restarts=5, backoff_s=0),
+                     sleep=lambda s: None)
+    assert sup.run(flaky) == "done"
+    assert calls == [0, 1, 2]
+    assert sup.restarts == 2
+
+
+def test_supervisor_budget_exhaustion():
+    sup = Supervisor(RestartPolicy(max_restarts=2, backoff_s=0),
+                     sleep=lambda s: None)
+    with pytest.raises(RuntimeError, match="restart budget"):
+        sup.run(lambda attempt: (_ for _ in ()).throw(RuntimeError("x")))
+    assert sup.restarts == 3
+
+
+def test_straggler_monitor_flags_slow_steps():
+    mon = StragglerMonitor(alpha=0.5, threshold=2.0, warmup_steps=2)
+    for i in range(5):
+        assert not mon.observe(i, 0.1)
+    assert mon.observe(5, 0.5)       # 5× the EMA → flagged
+    assert mon.flagged == [5]
+    assert not mon.observe(6, 0.1)   # EMA not poisoned by the straggler
+
+
+def test_heartbeat_detects_death():
+    hb = Heartbeat(interval_s=0.05, miss_limit=2)
+    hb.start()
+    import time
+    time.sleep(0.12)
+    assert hb.is_alive()
+    hb.stop()
+    last = hb.last_beat
+    assert not hb.is_alive(now=last + 1.0)
+
+
+# ------------------------------------------------- end-to-end resume -----
+
+def test_train_crash_and_resume_deterministic(tmp_path):
+    """Train 6 steps; crash at 3 (after a save at 2); supervisor restarts;
+    resumed run must land on the exact same final loss as an uninterrupted
+    run (determinism contract of pipeline + checkpoint)."""
+    from repro.configs import get_smoke
+    from repro.data.pipeline import SyntheticLM
+    from repro.train import loop as train_loop
+
+    cfg = get_smoke("glm4_9b")
+    src = SyntheticLM(cfg.vocab, 32, 4, seed=0)
+    logs_a = []
+
+    # uninterrupted reference
+    state_ref = train_loop.train(
+        cfg, src, 6, ckpt_dir=str(tmp_path / "ref"), save_every=2,
+        log_every=1, log_fn=logs_a.append)
+
+    # crash-and-resume run
+    crash_dir = str(tmp_path / "crash")
+    sup = Supervisor(RestartPolicy(max_restarts=1, backoff_s=0),
+                     sleep=lambda s: None)
+
+    def run(attempt):
+        return train_loop.train(
+            cfg, src, 6, ckpt_dir=crash_dir, save_every=2, log_every=1,
+            fail_at_step=3 if attempt == 0 else None,
+            log_fn=lambda m: None)
+
+    state_resumed = sup.run(run)
+    assert sup.restarts == 1
+    np.testing.assert_allclose(
+        np.asarray(jax.device_get(state_ref.params["final_norm"]["g"])),
+        np.asarray(jax.device_get(
+            state_resumed.params["final_norm"]["g"])),
+        rtol=1e-5, atol=1e-6)

@@ -1,0 +1,200 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def randf(*shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape).astype(dtype) * scale)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------- gemm ---
+
+@pytest.mark.parametrize("m,n,k", [
+    (128, 128, 128), (256, 128, 384), (200, 150, 300), (64, 64, 64),
+    (129, 257, 130), (1, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_matches_ref(m, n, k, dtype):
+    a = randf(m, k).astype(dtype)
+    b = randf(k, n).astype(dtype)
+    out = ops.gemm(a, b)
+    expect = ref.gemm(a, b)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        **tol(dtype))
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 300), n=st.integers(1, 300), k=st.integers(1, 300))
+def test_gemm_hypothesis_shapes(m, n, k):
+    a = randf(m, k)
+    b = randf(k, n)
+    np.testing.assert_allclose(
+        np.asarray(ops.gemm(a, b)), np.asarray(ref.gemm(a, b)),
+        rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------- syrk ---
+
+@pytest.mark.parametrize("m,k", [
+    (128, 128), (256, 128), (384, 256), (130, 70), (257, 511),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_syrk_matches_ref(m, k, dtype):
+    a = randf(m, k).astype(dtype)
+    out = ops.syrk(a)
+    expect = ref.syrk(a)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        **tol(dtype))
+
+
+def test_syrk_strictly_upper_is_zero():
+    a = randf(256, 64)
+    out = np.asarray(ops.syrk(a))
+    assert np.all(np.triu(out, 1) == 0.0)
+
+
+# ---------------------------------------------------------------- symm ---
+
+@pytest.mark.parametrize("m,n", [
+    (128, 128), (256, 64), (300, 120), (129, 33),
+])
+def test_symm_matches_ref(m, n):
+    s_low = jnp.asarray(np.tril(RNG.standard_normal((m, m))).astype(
+        np.float32))
+    b = randf(m, n)
+    np.testing.assert_allclose(
+        np.asarray(ops.symm(s_low, b)), np.asarray(ref.symm(s_low, b)),
+        rtol=1e-4, atol=1e-3)
+
+
+def test_symm_ignores_strict_upper_garbage():
+    m, n = 192, 64
+    low = np.tril(RNG.standard_normal((m, m)))
+    garbage = low + np.triu(RNG.standard_normal((m, m)) * 100, 1)
+    b = randf(m, n)
+    out = ops.symm(jnp.asarray(garbage.astype(np.float32)), b)
+    expect = ref.symm(jnp.asarray(low.astype(np.float32)), b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------- chain gemm ---
+
+@pytest.mark.parametrize("m,k,l,n", [
+    (128, 128, 128, 128), (130, 70, 150, 60), (256, 512, 128, 384),
+])
+def test_chain_gemm_matches_ref(m, k, l, n):
+    a, b, c = randf(m, k), randf(k, l), randf(l, n)
+    np.testing.assert_allclose(
+        np.asarray(ops.chain_gemm(a, b, c)),
+        np.asarray(ref.chain_gemm(a, b, c)), rtol=1e-4, atol=1e-2)
+
+
+def test_chain_gemm_falls_back_above_vmem_bound():
+    # Big enough that the fused kernel would exceed the VMEM bound.
+    a, b, c = randf(64, 4096), randf(4096, 4096), randf(4096, 64)
+    np.testing.assert_allclose(
+        np.asarray(ops.chain_gemm(a, b, c)),
+        np.asarray(ref.chain_gemm(a, b, c)), rtol=1e-3, atol=5e-2)
+
+
+# ------------------------------------------------------ flash attention ---
+
+@pytest.mark.parametrize("kwargs", [
+    dict(causal=True),
+    dict(causal=False),
+    dict(causal=True, logit_softcap=30.0),
+    dict(causal=True, window=128),
+    dict(causal=True, window=64, logit_softcap=20.0),
+])
+def test_flash_attention_variants(kwargs):
+    B, H, Hkv, S, D = 2, 4, 2, 256, 64
+    q = randf(B, H, S, D, scale=0.3)
+    k = randf(B, Hkv, S, D, scale=0.3)
+    v = randf(B, Hkv, S, D)
+    np.testing.assert_allclose(
+        np.asarray(ops.flash_attention(q, k, v, **kwargs)),
+        np.asarray(ref.flash_attention(q, k, v, **kwargs)),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_mha_no_gqa():
+    B, H, S, D = 1, 2, 384, 32
+    q = randf(B, H, S, D, scale=0.3)
+    k = randf(B, H, S, D, scale=0.3)
+    v = randf(B, H, S, D)
+    np.testing.assert_allclose(
+        np.asarray(ops.flash_attention(q, k, v)),
+        np.asarray(ref.flash_attention(q, k, v)), rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_odd_seq_falls_back():
+    B, H, S, D = 1, 2, 100, 32   # not block divisible → reference path
+    q = randf(B, H, S, D, scale=0.3)
+    k = randf(B, H, S, D, scale=0.3)
+    v = randf(B, H, S, D)
+    np.testing.assert_allclose(
+        np.asarray(ops.flash_attention(q, k, v)),
+        np.asarray(ref.flash_attention(q, k, v)), rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------- chunked attention (train) ---
+
+def test_chunked_attention_value_and_grad_match_dense():
+    from repro.models import attention
+    from repro.models.attention import AttnConfig
+    B, H, Hkv, S, D = 1, 4, 2, 1024, 32
+    q = randf(B, S, H, D, scale=0.3)
+    k = randf(B, S, Hkv, D, scale=0.3)
+    v = randf(B, S, Hkv, D)
+    for kwargs in (dict(), dict(window=256), dict(logit_softcap=40.0)):
+        acfg = AttnConfig(d_model=H * D, n_heads=H, n_kv_heads=Hkv,
+                          head_dim=D, **kwargs)
+
+        def f_c(q, k, v):
+            return jnp.sum(attention.chunked_attention(acfg, q, k, v) ** 2)
+
+        def f_d(q, k, v):
+            return jnp.sum(attention._dense_attention(acfg, q, k, v) ** 2)
+
+        v1, g1 = jax.value_and_grad(f_c, argnums=(0, 1, 2))(q, k, v)
+        v2, g2 = jax.value_and_grad(f_d, argnums=(0, 1, 2))(q, k, v)
+        assert abs(v1 - v2) / abs(v2) < 1e-5
+        # dq accumulates in f32 (strict); dk/dv partials are emitted bf16
+        # per block (the collective-halving §Perf trade) → loose tolerance.
+        np.testing.assert_allclose(np.asarray(g1[0]), np.asarray(g2[0]),
+                                   rtol=1e-3, atol=1e-4)
+        for a, b in zip(g1[1:], g2[1:]):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=3e-2, atol=3e-2)
+
+
+# -------------------------------------------------------- planner+pallas --
+
+def test_jax_runner_pallas_path_matches_jnp_path():
+    from repro.core import enumerate_algorithms, gram_times
+    from repro.core.runners import JaxRunner
+    algos = enumerate_algorithms(gram_times(128, 192, 64))
+    A = randf(128, 192)
+    B = randf(128, 64)
+    for a in algos:
+        fn_ref = JaxRunner(use_pallas=False).build(a)
+        fn_pl = JaxRunner(use_pallas=True).build(a)
+        np.testing.assert_allclose(
+            np.asarray(fn_pl(A, A, B)), np.asarray(fn_ref(A, A, B)),
+            rtol=1e-4, atol=1e-2)

@@ -1,0 +1,81 @@
+"""Sharding rules + activation-sharding context + vocab padding."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import context as ctx
+from repro.sharding.rules import pick_param_policy, rules_for
+
+
+def test_helpers_are_identity_outside_context():
+    x3 = jnp.ones((2, 8, 4))
+    x4 = jnp.ones((2, 8, 4, 4))
+    assert ctx.shard_seq(x3) is x3
+    assert ctx.shard_logits(x3) is x3
+    assert ctx.shard_heads(x4) is x4
+    assert ctx.shard_moe_groups(x3) is x3
+
+
+def test_context_applies_and_restores():
+    if jax.device_count() < 2:
+        pytest.skip("needs >= 2 devices")
+    mesh = jax.make_mesh((jax.device_count() // 2, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    x = jnp.ones((4, 8, 4))
+    with ctx.activation_sharding(mesh):
+        y = jax.jit(ctx.shard_seq)(x)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+    assert ctx.shard_seq(x) is x  # restored
+
+
+def test_heads_toggle():
+    if jax.device_count() < 2:
+        pytest.skip("needs >= 2 devices")
+    mesh = jax.make_mesh((jax.device_count() // 2, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    x = jnp.ones((2, 4, 4, 2))
+    with ctx.activation_sharding(mesh, heads=False):
+        assert ctx.shard_heads(x) is x
+    with ctx.activation_sharding(mesh, heads=True):
+        y = ctx.shard_heads(x)
+        assert y is not x
+
+
+def test_param_policy_picker():
+    mesh16 = type("M", (), {"shape": {"model": 16}})()
+    # 9B fp32 params+grads on a 16-way TP shard: 4.7 GB → zero1
+    assert pick_param_policy(9_400_000_000, mesh16) == "zero1"
+    # 76B: 38 GB → fsdp
+    assert pick_param_policy(76_000_000_000, mesh16) == "fsdp"
+    assert rules_for("zero1")["embed"] is None
+    assert rules_for("fsdp")["embed"] == ("pod", "data")
+
+
+def test_padded_vocab_rules():
+    from repro.configs import get
+    assert get("mamba2_370m").padded_vocab == 50304     # 50280 → pad
+    assert get("whisper_tiny").padded_vocab == 51968    # 51865 → pad
+    assert get("glm4_9b").padded_vocab == 151552        # divisible → keep
+    for arch in ("mamba2_370m", "whisper_tiny"):
+        assert get(arch).padded_vocab % 16 == 0
+
+
+def test_padded_vocab_logits_masked():
+    """Pad columns must never win the argmax / carry softmax mass."""
+    import dataclasses
+    from repro.configs import get_smoke
+    from repro.models import api
+    cfg = dataclasses.replace(get_smoke("yi_9b"), vocab=250)  # 250 % 16 != 0
+    assert cfg.padded_vocab == 256
+    params, _ = api.init(jax.random.PRNGKey(0), cfg)
+    tokens = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab, (1, 8), dtype=np.int32))
+    logits, _ = api.forward_train(params, cfg, {"tokens": tokens,
+                                                "labels": tokens})
+    assert logits.shape[-1] == 256
+    pad = np.asarray(logits[..., cfg.vocab:])
+    assert np.all(pad <= -1e29)
+    assert int(jnp.argmax(logits[0, -1])) < cfg.vocab
