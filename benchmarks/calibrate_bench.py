@@ -1,0 +1,79 @@
+"""Calibration subsystem benchmark: sweep cost, cache speedup, ranking drift.
+
+Three questions a deployer asks before adopting calibrated profiles:
+
+1. how long does a calibration sweep take (per grid)?
+2. how much does the persistent cache save on subsequent startups?
+3. where do the ``flops`` / ``perfmodel`` / ``hybrid`` discriminants
+   disagree on real instances — i.e. what the calibration actually buys.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+
+from repro.core import (
+    GRAM_AATB,
+    enumerate_algorithms,
+    load_profile,
+    select,
+)
+from repro.core.calibrate import GRIDS, calibrate
+
+from .common import FULL, emit, note
+
+
+def main() -> None:
+    grid = "default" if FULL else "small"
+    tmp = Path(tempfile.mkdtemp(prefix="repro-calib-bench-"))
+
+    # 1. sweep cost
+    t0 = time.perf_counter()
+    res = calibrate(backend="blas", grid=grid, reps=3 if not FULL else 10,
+                    out=tmp)
+    sweep_s = time.perf_counter() - t0
+    note(f"\n== calibration sweep ({grid}: {len(GRIDS[grid])}-point grid, "
+         f"{res.n_calls} kernel shapes) ==")
+    note(f"sweep: {sweep_s:.2f}s  peak ≈ {res.profile.peak() / 1e9:.1f} "
+         f"GFLOP/s  -> {res.path}")
+    emit(f"calibrate_sweep_{grid}", sweep_s * 1e6,
+         f"n_calls={res.n_calls}")
+
+    # 2. cache load vs re-measurement
+    t0 = time.perf_counter()
+    cached, _ = load_profile(res.path)
+    load_s = time.perf_counter() - t0
+    note(f"cache load: {load_s * 1e3:.2f}ms "
+         f"(speedup ×{sweep_s / max(load_s, 1e-9):.0f} vs re-measuring)")
+    emit("calibrate_cache_load", load_s * 1e6,
+         f"speedup_x={sweep_s / max(load_s, 1e-9):.0f}")
+
+    # 3. discriminant agreement on a spread of AAᵀB instances
+    points = [(300, 200, 100), (600, 80, 400), (120, 500, 90),
+              (256, 256, 256)]
+    if FULL:
+        points += [(900, 150, 700), (1000, 1000, 60)]
+    note("\n== discriminant picks (AAᵀB) ==")
+    note(f"{'instance':>18} {'flops':>24} {'perfmodel':>24} {'hybrid':>24}")
+    disagreements = 0
+    for pt in points:
+        algos = enumerate_algorithms(GRAM_AATB.build(pt))
+        picks = {}
+        for disc in ("flops", "perfmodel", "hybrid"):
+            ranked = select(algos, discriminant=disc, profile=cached,
+                            dtype_bytes=8)
+            picks[disc] = ranked[0].name
+        if len(set(picks.values())) > 1:
+            disagreements += 1
+        note(f"{str(pt):>18} {picks['flops']:>24} "
+             f"{picks['perfmodel']:>24} {picks['hybrid']:>24}")
+    emit("calibrate_disagreements", float(disagreements),
+         f"instances={len(points)}")
+    note(f"({disagreements}/{len(points)} instances where a calibrated "
+         f"discriminant overrides the FLOP choice)")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,15 +9,16 @@ predictable from per-kernel profiles alone* — the basis for the
 
 from __future__ import annotations
 
-import numpy as np
-
 from repro.core import (
     GRAM_AATB,
     MATRIX_CHAIN_ABCD,
     BlasRunner,
+    current_fingerprint,
     experiment1_random_search,
     experiment2_regions,
     experiment3_predict_from_benchmarks,
+    load_default_profile,
+    save_profile,
 )
 
 from .common import FULL, emit, note
@@ -34,9 +35,18 @@ def run_spec(spec, box, n_seeds, reps):
         return
     regions = experiment2_regions(spec, runner, seeds.anomalies, box=box,
                                   threshold=0.05)
+    # Seed from the machine's persisted calibration (only unmeasured calls
+    # are benchmarked), then persist the enriched table back.
+    cached = load_default_profile()
+    n_cached = len(cached.table) if cached is not None else 0
     res = experiment3_predict_from_benchmarks(
-        spec, runner, regions.classified, threshold=0.05)
+        spec, runner, regions.classified, threshold=0.05, profile=cached)
+    save_profile(res.profile, current_fingerprint(),
+                 meta={"source": f"experiment3:{spec.name}"})
     note(f"\n== Experiment 3: {spec.name} ==")
+    if n_cached:
+        note(f"(reused {n_cached} persisted kernel timings; "
+             f"{len(res.profile.table) - n_cached} newly measured)")
     note(res.confusion.as_table())
     emit(f"exp3_{spec.name}_recall", res.confusion.recall * 100,
          f"precision={res.confusion.precision:.3f};"

@@ -13,6 +13,7 @@ import traceback
 
 def main() -> None:
     from . import (
+        calibrate_bench,
         experiment1,
         experiment2,
         experiment3,
@@ -25,6 +26,7 @@ def main() -> None:
 
     sections = [
         ("kernel_profiles (paper Fig 1)", kernel_profiles.main),
+        ("calibration subsystem", calibrate_bench.main),
         ("experiment1 (paper §4.1.1/§4.2.1)", experiment1.main),
         ("experiment2 (paper §4.1.2/§4.2.2)", experiment2.main),
         ("experiment3 (paper Tables 1-2)", experiment3.main),

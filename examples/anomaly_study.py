@@ -4,17 +4,22 @@ Random-searches for anomalies with real BLAS, traverses one region, then
 predicts anomalies from isolated kernel benchmarks and prints the
 confusion matrix — the complete §3.4 pipeline, scaled to a few minutes.
 
+Kernel timings measured here are reused from — and persisted back to — the
+machine's calibrated profile cache (see ``python -m repro.core.calibrate``),
+so repeat runs skip already-benchmarked shapes.
+
 Run:  PYTHONPATH=src python examples/anomaly_study.py
 """
-
-import numpy as np
 
 from repro.core import (
     GRAM_AATB,
     BlasRunner,
+    current_fingerprint,
     experiment1_random_search,
     experiment2_regions,
     experiment3_predict_from_benchmarks,
+    load_default_profile,
+    save_profile,
 )
 
 
@@ -40,8 +45,15 @@ def main():
               f"[{scan.lo}, {scan.hi}] thickness={scan.thickness}")
 
     print("\nExperiment 3: predict anomalies from kernel benchmarks...")
+    cached = load_default_profile()
+    n_cached = len(cached.table) if cached is not None else 0
+    if n_cached:
+        print(f"  (seeding from {n_cached} persisted kernel timings)")
     e3 = experiment3_predict_from_benchmarks(
-        GRAM_AATB, runner, e2.classified, threshold=0.05)
+        GRAM_AATB, runner, e2.classified, threshold=0.05, profile=cached)
+    path = save_profile(e3.profile, current_fingerprint(),
+                        meta={"source": "examples/anomaly_study"})
+    print(f"  (profile now {len(e3.profile.table)} entries -> {path})")
     print(e3.confusion.as_table())
     print("\npaper's qualitative claim — anomalies are largely "
           "predictable from per-kernel profiles — "

@@ -29,13 +29,45 @@ from .perfmodel import (
     TPU_V5E,
     AnalyticalTPUProfile,
     HardwareSpec,
+    HybridProfile,
     KernelProfile,
     TableProfile,
     predict_algorithm_time,
 )
-from .planner import Plan, Planner, default_planner, plan
-from .runners import BlasRunner, JaxRunner
-from .selector import DISCRIMINANTS, select
+from .planner import (
+    Plan,
+    Planner,
+    default_planner,
+    plan,
+    reset_default_planner,
+    resolve_profile,
+)
+from .profile_store import (
+    FingerprintMismatchError,
+    HardwareFingerprint,
+    ProfileStoreError,
+    current_fingerprint,
+    load_default_profile,
+    load_profile,
+    profile_path,
+    save_profile,
+)
+from .runners import BlasRunner, JaxRunner, measure_seconds
+from .selector import DISCRIMINANTS, as_hybrid, select
+
+# Lazy (PEP 562) so `python -m repro.core.calibrate` doesn't import the
+# CLI module twice (runpy warns when the target is already in sys.modules).
+# NB `repro.core.calibrate` names the *submodule* (like os.path); the
+# function is `repro.core.calibrate.calibrate`.
+_CALIBRATE_EXPORTS = ("GRIDS", "CalibrationResult", "sweep_kernels")
+
+
+def __getattr__(name):
+    if name in _CALIBRATE_EXPORTS:
+        import importlib
+        mod = importlib.import_module(".calibrate", __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "Algorithm", "enumerate_algorithms", "optimal_chain_order",
@@ -46,9 +78,14 @@ __all__ = [
     "experiment3_predict_from_benchmarks", "measure_instance",
     "KernelCall", "gemm", "kernel_flops", "symm", "syrk", "total_flops",
     "tri2full",
-    "TPU_V5E", "AnalyticalTPUProfile", "HardwareSpec", "KernelProfile",
-    "TableProfile", "predict_algorithm_time",
-    "Plan", "Planner", "default_planner", "plan",
-    "BlasRunner", "JaxRunner",
-    "DISCRIMINANTS", "select",
+    "TPU_V5E", "AnalyticalTPUProfile", "HardwareSpec", "HybridProfile",
+    "KernelProfile", "TableProfile", "predict_algorithm_time",
+    "Plan", "Planner", "default_planner", "plan", "reset_default_planner",
+    "resolve_profile",
+    "GRIDS", "CalibrationResult", "sweep_kernels",
+    "FingerprintMismatchError", "HardwareFingerprint", "ProfileStoreError",
+    "current_fingerprint", "load_default_profile", "load_profile",
+    "profile_path", "save_profile",
+    "BlasRunner", "JaxRunner", "measure_seconds",
+    "DISCRIMINANTS", "as_hybrid", "select",
 ]

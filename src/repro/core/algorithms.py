@@ -29,7 +29,7 @@ import dataclasses
 import itertools
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
-from .expr import Chain, Matrix, Operand, Transpose, bind_dims, is_gram_pair
+from .expr import Chain, Matrix, Transpose, bind_dims, is_gram_pair
 from .flops import KernelCall, gemm, symm, syrk, total_flops, tri2full
 
 

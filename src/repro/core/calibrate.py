@@ -1,0 +1,194 @@
+"""Calibration: measure this machine's kernel profile, once.
+
+The paper's conclusion — FLOPs alone mispredict; combine them with kernel
+performance models — needs those models to exist for *this* hardware.
+:func:`calibrate` sweeps the kernel space (gemm/syrk/symm over a
+log-spaced dim grid, plus tri2full) with either runner backend, builds a
+measured :class:`~repro.core.perfmodel.TableProfile`, and persists it via
+:mod:`repro.core.profile_store` so the cost is paid once per machine:
+subsequent processes auto-load it through ``default_planner()``.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.core.calibrate --grid small --out DIR
+    PYTHONPATH=src python -m repro.core.calibrate --backend jax --grid default
+
+Grids are named (small/default/full) rather than free-form so cache files
+produced on different machines cover comparable shape ranges.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+from pathlib import Path
+from typing import Iterable, List, Optional
+
+from .flops import KernelCall, gemm, symm, syrk, tri2full
+from .perfmodel import TableProfile
+from .profile_store import (
+    HardwareFingerprint,
+    current_fingerprint,
+    save_profile,
+)
+from .runners import BlasRunner, JaxRunner
+
+# Log-spaced (power-of-two) dim grids. "small" finishes in seconds and is
+# meant for tests/smoke; "default" is the per-machine calibration;
+# "full" approaches the paper's boxes (minutes of BLAS time).
+GRIDS = {
+    "small": (64, 128, 256),
+    "default": (32, 64, 128, 256, 512, 1024),
+    "full": (32, 64, 128, 256, 512, 1024, 1536, 2048),
+}
+
+
+def grid_calls(grid: Iterable[int]) -> List[KernelCall]:
+    """Every kernel call the sweep measures, in deterministic order.
+
+    gemm covers the full (m, n, k) cross product — the aspect-ratio
+    extremes are exactly where efficiency cliffs live (paper Fig. 1) —
+    while syrk/symm take (m, k)/(m, n) pairs and tri2full the diagonal.
+    """
+    dims = sorted(set(int(d) for d in grid))
+    calls: List[KernelCall] = []
+    for m in dims:
+        for n in dims:
+            for k in dims:
+                calls.append(gemm(m, n, k))
+    for m in dims:
+        for k in dims:
+            calls.append(syrk(m, k))
+    for m in dims:
+        for n in dims:
+            calls.append(symm(m, n))
+    for m in dims:
+        calls.append(tri2full(m))
+    return calls
+
+
+@dataclasses.dataclass
+class CalibrationResult:
+    profile: TableProfile
+    fingerprint: HardwareFingerprint
+    path: Optional[Path]      # None when persistence was disabled
+    wall_s: float
+    n_calls: int
+
+
+def sweep_kernels(
+    runner,
+    grid: Iterable[int],
+    reps: int = 3,
+    dtype: Optional[str] = None,
+    progress=None,
+) -> TableProfile:
+    """Benchmark every grid call in isolation; returns the measured table.
+
+    ``runner`` is any object with ``benchmark_call(call, reps=None) ->
+    float`` (both :class:`BlasRunner` and :class:`JaxRunner` qualify).
+    ``dtype`` is forwarded only to :class:`JaxRunner` (BLAS is always
+    float64; other runners keep the documented two-arg contract). Peak
+    FLOP/s is estimated as the best throughput observed anywhere in the
+    sweep, so ``TableProfile.efficiency`` is relative to this machine's
+    own best.
+    """
+    calls = grid_calls(grid)
+    table = {}
+    peak = 1.0
+    for i, call in enumerate(calls):
+        if isinstance(runner, JaxRunner):
+            seconds = runner.benchmark_call(
+                call, reps=reps, dtype=dtype or "float32")
+        else:
+            seconds = runner.benchmark_call(call, reps=reps)
+        table[(call.kind, call.dims)] = seconds
+        if seconds > 0 and call.flops:
+            peak = max(peak, call.flops / seconds)
+        if progress:
+            progress(i + 1, len(calls), call, seconds)
+    return TableProfile(peak_flops=peak, table=table)
+
+
+def calibrate(
+    backend: str = "blas",
+    grid: str = "small",
+    reps: int = 3,
+    out: Optional[Path] = None,
+    dtype: Optional[str] = None,
+    save: bool = True,
+    progress=None,
+) -> CalibrationResult:
+    """Measure + persist this machine's kernel profile.
+
+    ``out`` is a *directory*; the filename is derived from the hardware
+    fingerprint so calibrations for different backends/dtypes coexist.
+    With ``out=None`` the default cache dir is used — which is exactly
+    where ``default_planner()`` looks, closing the loop.
+    """
+    if grid not in GRIDS:
+        raise ValueError(f"unknown grid {grid!r}; expected {sorted(GRIDS)}")
+    if backend == "blas":
+        runner = BlasRunner(reps=reps)
+        if dtype not in (None, "float64"):
+            # scipy BLAS kernels here are double precision only; a
+            # different dtype label would stamp a fingerprint the
+            # measurements don't match.
+            raise ValueError(
+                f"blas backend measures float64; got dtype={dtype!r}")
+        dtype = "float64"
+    elif backend == "jax":
+        runner = JaxRunner()
+        dtype = dtype or "float32"
+    else:
+        raise ValueError(f"unknown backend {backend!r}; expected blas|jax")
+    fp = current_fingerprint(backend=backend, dtype=dtype)
+    t0 = time.perf_counter()
+    profile = sweep_kernels(runner, GRIDS[grid], reps=reps, dtype=dtype,
+                            progress=progress)
+    wall = time.perf_counter() - t0
+    path = None
+    if save:
+        path = save_profile(
+            profile, fp, directory=out,
+            meta={"grid": grid, "reps": reps, "wall_s": round(wall, 3)})
+    return CalibrationResult(profile=profile, fingerprint=fp, path=path,
+                             wall_s=wall, n_calls=len(profile.table))
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.calibrate",
+        description="Calibrate this machine's kernel performance profile.")
+    ap.add_argument("--backend", choices=("blas", "jax"), default="blas")
+    ap.add_argument("--grid", choices=sorted(GRIDS), default="default")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="timing repetitions per kernel call")
+    ap.add_argument("--out", type=Path, default=None,
+                    help="output directory (default: the profile cache dir "
+                         "that default_planner() auto-loads from)")
+    ap.add_argument("--dtype", default=None,
+                    help="dtype label for the fingerprint "
+                         "(default: float64 for blas, float32 for jax)")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    def progress(i: int, n: int, call: KernelCall, seconds: float):
+        if not args.quiet and (i % 25 == 0 or i == n):
+            print(f"  [{i}/{n}] {call} {seconds * 1e6:.1f}us",
+                  file=sys.stderr)
+
+    res = calibrate(backend=args.backend, grid=args.grid, reps=args.reps,
+                    out=args.out, dtype=args.dtype, progress=progress)
+    print(f"calibrated {res.n_calls} kernel shapes on "
+          f"{res.fingerprint.backend}/{res.fingerprint.device}"
+          f"/{res.fingerprint.dtype} in {res.wall_s:.1f}s "
+          f"(peak ≈ {res.profile.peak() / 1e9:.1f} GFLOP/s)")
+    print(f"profile written to {res.path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -169,11 +169,17 @@ def experiment3_predict_from_benchmarks(
     classified: Dict[Tuple[int, ...], Instance],
     threshold: float = 0.05,
     peak_flops: float = 1e11,
+    profile: Optional[TableProfile] = None,
 ) -> Experiment3Result:
     """Paper §3.4.3: benchmark each distinct kernel call in isolation, then
     predict each instance's fastest/cheapest sets from the additive model and
-    compare against measured ground truth."""
-    profile = TableProfile(peak_flops=peak_flops)
+    compare against measured ground truth.
+
+    Pass a persisted ``profile`` (see :mod:`repro.core.profile_store`) to
+    reuse prior calibrations: only calls it lacks are measured, and the
+    entries added here flow back to the caller through the result."""
+    if profile is None:
+        profile = TableProfile(peak_flops=peak_flops)
     cm = ConfusionMatrix()
 
     # 1. Collect + benchmark every distinct call across all instances.

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 from typing import Dict, Iterable, Optional, Tuple
 
 from .flops import KernelCall
@@ -145,44 +146,120 @@ class TableProfile(KernelProfile):
                  table: Optional[Dict[Tuple[str, Tuple[int, ...]], float]] = None):
         self._peak = peak_flops
         self.table: Dict[Tuple[str, Tuple[int, ...]], float] = dict(table or {})
+        self._write_lock = threading.Lock()
 
     def peak(self) -> float:
         return self._peak
 
     def record(self, call: KernelCall, seconds: float) -> None:
-        self.table[(call.kind, call.dims)] = seconds
+        # Copy-on-write under a writer lock: readers (time/nearest iterate
+        # the dict) hold the old mapping while recorders rebind — so the
+        # planner's online refinement never trips "dict changed size
+        # during iteration" in a planning thread — and the lock keeps two
+        # recorders from losing each other's read-copy-rebind. Tables are
+        # small (≤ ~10³ entries), so the copy is cheap relative to one
+        # benchmark rep.
+        with self._write_lock:
+            self.table = {**self.table, (call.kind, call.dims): seconds}
 
     def __contains__(self, call: KernelCall) -> bool:
         return (call.kind, call.dims) in self.table
 
-    def time(self, call: KernelCall, dtype_bytes: int = 8) -> float:
-        key = (call.kind, call.dims)
-        hit = self.table.get(key)
-        if hit is not None:
-            return hit
-        if call.kind == "tri2full":
-            # Memory-only op; charge linearly from any recorded copy, else 0
-            # cost (paper charges 0 FLOPs; time is small vs matmuls).
-            near = [(d, t) for (k2, d), t in self.table.items()
-                    if k2 == "tri2full"]
-            if near:
-                d0, t0 = near[0]
-                return t0 * (call.dims[0] ** 2) / (d0[0] ** 2)
-            return 0.0
-        # Nearest neighbour in log space, FLOP-ratio scaled.
+    def nearest(
+        self, call: KernelCall,
+    ) -> Optional[Tuple[Tuple[int, ...], float, float]]:
+        """Closest same-kind entry in log-dim space.
+
+        Returns ``(dims, seconds, squared_log_distance)`` or ``None`` when
+        no same-kind entry exists. Shared by :meth:`time` and
+        :class:`HybridProfile` so "which entry is closest" and "which entry
+        we extrapolate from" can never disagree.
+        """
+        table = self.table  # snapshot ref (record() rebinds, never mutates)
         best, bestdist = None, math.inf
         lg = [math.log(max(2, d)) for d in call.dims]
-        for (k2, dims), t in self.table.items():
+        for (k2, dims), t in table.items():
             if k2 != call.kind or len(dims) != len(call.dims):
                 continue
             dist = sum((math.log(max(2, d)) - g) ** 2 for d, g in zip(dims, lg))
             if dist < bestdist:
                 bestdist, best = dist, (dims, t)
-        if best is None:
+        return None if best is None else (best[0], best[1], bestdist)
+
+    def extrapolate(
+        self, call: KernelCall,
+        near: Optional[Tuple[Tuple[int, ...], float, float]],
+    ) -> float:
+        """Scale a :meth:`nearest` hit to ``call``'s size.
+
+        tri2full (0 FLOPs, memory-only) scales quadratically in the dim
+        and costs 0 with no reference; compute kernels scale by FLOP
+        ratio and raise without one.
+        """
+        if call.kind == "tri2full":
+            if near is None:
+                return 0.0
+            dims0, t0, _ = near
+            return t0 * (call.dims[0] ** 2) / (dims0[0] ** 2)
+        if near is None:
             raise KeyError(f"no profile data for kernel kind {call.kind!r}")
-        dims0, t0 = best
+        dims0, t0, _ = near
         f0 = KernelCall(call.kind, dims0).flops
         return t0 * (call.flops / max(1, f0))
+
+    def time(self, call: KernelCall, dtype_bytes: int = 8) -> float:
+        hit = self.table.get((call.kind, call.dims))
+        if hit is not None:
+            return hit
+        return self.extrapolate(call, self.nearest(call))
+
+
+class HybridProfile(KernelProfile):
+    """Measured-where-known, analytical-elsewhere (paper's conjecture).
+
+    The paper's conclusion proposes "combining FLOP counts with kernel
+    performance models"; this profile is that combination as a per-call
+    policy: a calibrated :class:`TableProfile` answers for shapes it has
+    measured (exactly, or by same-kind nearest neighbour within
+    ``max_log_dist`` of a recorded entry), and the closed-form
+    :class:`AnalyticalTPUProfile` answers for everything else — so a
+    partially calibrated machine still ranks *every* candidate algorithm.
+
+    ``max_log_dist`` is the squared log-space distance beyond which a
+    table entry is considered too remote to extrapolate from; the default
+    0.5 ≈ each dim within ~2× of a measured one on average.
+    """
+
+    def __init__(self, table: TableProfile,
+                 analytical: Optional[KernelProfile] = None,
+                 max_log_dist: float = 0.5):
+        self.table_profile = table
+        self.analytical = analytical or AnalyticalTPUProfile()
+        self.max_log_dist = max_log_dist
+
+    def peak(self) -> float:
+        return self.table_profile.peak()
+
+    def source(self, call: KernelCall) -> str:
+        """Which model answers for ``call``: ``"table"`` | ``"analytical"``."""
+        if call in self.table_profile:
+            return "table"
+        near = self.table_profile.nearest(call)
+        if near is not None and near[2] <= self.max_log_dist:
+            return "table"
+        return "analytical"
+
+    def time(self, call: KernelCall, dtype_bytes: int = 8) -> float:
+        hit = self.table_profile.table.get((call.kind, call.dims))
+        if hit is not None:
+            return hit
+        near = self.table_profile.nearest(call)
+        if near is not None and near[2] <= self.max_log_dist:
+            return self.table_profile.extrapolate(call, near)
+        return self.analytical.time(call, dtype_bytes)
+
+    def record(self, call: KernelCall, seconds: float) -> None:
+        self.table_profile.record(call, seconds)
 
 
 def predict_algorithm_time(

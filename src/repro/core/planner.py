@@ -8,6 +8,21 @@ chosen by the configured discriminant. Plans are memoised per
 is paid once per shape — the common case in training where shapes are
 static across steps.
 
+Profiles resolve in three tiers (see ISSUE: calibrated-profile subsystem):
+
+1. an explicit ``profile=`` argument wins;
+2. otherwise a persisted calibration for this machine is auto-loaded from
+   the profile cache (:mod:`repro.core.profile_store`) and wrapped in the
+   hybrid measured-∨-analytical policy;
+3. otherwise the closed-form :class:`AnalyticalTPUProfile`.
+
+With ``record=True`` the planner additionally *refines* the live profile
+online: each ``planner(chain, *arrays)`` execution is timed (blocking on
+JAX async dispatch) and the observed wall time is apportioned over the
+plan's kernel calls and blended into the table — so production traffic
+keeps sharpening the model the calibration seeded. ``planner.save()``
+persists the refined table back to the cache.
+
 The planner is consumed by:
   * ``repro.optim.muon``   — Gram-product chains (the paper's AAᵀB);
   * ``repro.models.ssm``   — SSD quadratic-vs-chunked dual selection;
@@ -18,13 +33,19 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+from pathlib import Path
 from typing import Callable, Dict, Optional, Tuple
 
 from .algorithms import Algorithm, enumerate_algorithms
 from .expr import Chain, bind_dims
-from .perfmodel import AnalyticalTPUProfile, KernelProfile
-from .runners import JaxRunner
-from .selector import select
+from .perfmodel import AnalyticalTPUProfile, KernelProfile, TableProfile
+from .profile_store import (
+    current_fingerprint,
+    load_default_profile,
+    save_profile,
+)
+from .runners import JaxRunner, measure_seconds
+from .selector import as_hybrid, select
 
 
 @dataclasses.dataclass
@@ -39,8 +60,26 @@ class Plan:
         return self.algorithm.flops
 
 
+def resolve_profile(
+    profile: Optional[KernelProfile] = None,
+    backend: str = "blas",
+    dtype: str = "float64",
+) -> KernelProfile:
+    """Tiered profile resolution: explicit → cached calibration → analytical.
+
+    A cached :class:`TableProfile` is wrapped into the hybrid policy so
+    shapes the calibration never measured still get analytical estimates.
+    """
+    if profile is not None:
+        return profile
+    cached = load_default_profile(backend=backend, dtype=dtype)
+    if cached is not None:
+        return as_hybrid(cached)
+    return AnalyticalTPUProfile()
+
+
 class Planner:
-    """Thread-safe, memoising planner."""
+    """Thread-safe, memoising planner with optional online refinement."""
 
     def __init__(
         self,
@@ -48,11 +87,32 @@ class Planner:
         profile: Optional[KernelProfile] = None,
         use_pallas: bool = False,
         dtype_bytes: int = 2,
+        record: bool = False,
+        observation_blend: float = 0.25,
+        profile_backend: Optional[str] = None,
+        profile_dtype: Optional[str] = None,
     ):
+        # One (backend, dtype) key governs BOTH the cache load in
+        # resolve_profile and save() below — asymmetric keys would persist
+        # refinements to a file no future load ever reads. The default key
+        # depends on `record`: a read-only planner consumes the BLAS
+        # calibration (the CLI's default output), but a recording planner
+        # produces timings via JaxRunner, and those must never be filed
+        # under the blas/float64 fingerprint experiment3 trusts as
+        # isolated BLAS benchmarks.
+        if profile_backend is None:
+            profile_backend = "jax" if record else "blas"
+        if profile_dtype is None:
+            profile_dtype = "float32" if record else "float64"
+        self.profile_backend = profile_backend
+        self.profile_dtype = profile_dtype
         self.discriminant = discriminant
-        self.profile = profile or AnalyticalTPUProfile()
+        self.profile = resolve_profile(profile, backend=profile_backend,
+                                       dtype=profile_dtype)
         self.runner = JaxRunner(use_pallas=use_pallas)
         self.dtype_bytes = dtype_bytes
+        self.record = record
+        self.observation_blend = observation_blend
         self._cache: Dict[Tuple, Plan] = {}
         self._lock = threading.Lock()
 
@@ -87,16 +147,98 @@ class Planner:
     def __call__(self, c: Chain, *arrays, env=None):
         """Plan and evaluate in one call (arrays follow chain leaf order,
         with Gram-pair leaves deduplicated: pass each distinct matrix once
-        per its first occurrence index)."""
+        per its first occurrence index). With ``record=True`` the execution
+        is timed and fed back into the live profile."""
         plan = self.plan(c, env)
-        return plan.fn(*arrays)
+        if not self.record:
+            return plan.fn(*arrays)
+        out, seconds = measure_seconds(plan.fn, *arrays)
+        self.observe(plan, seconds)
+        return out
+
+    # -- online refinement ------------------------------------------------
+    def _recording_table(self) -> Optional[TableProfile]:
+        prof = self.profile
+        if isinstance(prof, TableProfile):
+            return prof
+        return getattr(prof, "table_profile", None)
+
+    def observe(self, plan: Plan, seconds: float) -> None:
+        """Fold one measured plan execution back into the live profile.
+
+        The total wall time is apportioned over the plan's kernel calls in
+        proportion to their current predicted times (the additive model run
+        backwards), then EMA-blended into the table so noisy single
+        observations don't thrash a calibrated entry. No-op when the
+        profile has no table to record into (pure analytical).
+        """
+        table = self._recording_table()
+        if table is None or seconds <= 0:
+            return
+        calls = plan.algorithm.calls
+        if not calls:
+            return
+        # Apportioning weights must come from ONE model: a HybridProfile
+        # mixes measured entries (this machine's scale) with analytical
+        # fallbacks (TPU constants, often 100-1000× off), and proportions
+        # across that mix would credit analytically-predicted calls with
+        # near-zero shares — poisoning the table with "free" kernels. The
+        # analytical member's *relative* kernel costs are internally
+        # consistent, which is all apportioning needs.
+        weight_model = getattr(self.profile, "analytical", self.profile)
+        try:
+            preds = [max(weight_model.time(c, self.dtype_bytes), 1e-12)
+                     for c in calls]
+        except KeyError:
+            # Plain TableProfile with a kernel kind it has never seen
+            # (e.g. an empty table being bootstrapped): weight by the
+            # closed-form model instead of dying after the work is done.
+            weight_model = AnalyticalTPUProfile()
+            preds = [max(weight_model.time(c, self.dtype_bytes), 1e-12)
+                     for c in calls]
+        total = sum(preds)
+        blend = self.observation_blend
+        with self._lock:
+            for call, pred in zip(calls, preds):
+                share = seconds * pred / total
+                old = table.table.get((call.kind, call.dims))
+                new = share if old is None else (
+                    (1.0 - blend) * old + blend * share)
+                table.record(call, new)
+
+    def save(self, directory: Optional[Path] = None) -> Optional[Path]:
+        """Persist the (possibly refined) table profile to the cache.
+
+        Uses the planner's (profile_backend, profile_dtype) key — the same
+        key ``resolve_profile`` loads with, so the next process finds the
+        refinements. NB a profile passed *explicitly* to the constructor is
+        stamped with that key too: if you hand the planner a profile
+        calibrated for a different backend/dtype, set
+        ``profile_backend``/``profile_dtype`` to match its provenance or
+        the cache entry will misattribute the timings.
+        """
+        table = self._recording_table()
+        if table is None:
+            return None
+        fp = current_fingerprint(backend=self.profile_backend,
+                                 dtype=self.profile_dtype)
+        return save_profile(table, fp, directory=directory,
+                            meta={"source": "planner.online_refinement"})
 
 
 _default_planner: Optional[Planner] = None
+_planners_by_discriminant: Dict[str, "Planner"] = {}
 _default_lock = threading.Lock()
 
 
 def default_planner() -> Planner:
+    """Process-wide planner; auto-loads this machine's cached calibration.
+
+    The profile tier is resolved lazily at first use (see
+    :func:`resolve_profile`), so running ``python -m repro.core.calibrate``
+    before process start is all it takes to upgrade every consumer from
+    the analytical model to measured tables.
+    """
     global _default_planner
     with _default_lock:
         if _default_planner is None:
@@ -104,10 +246,26 @@ def default_planner() -> Planner:
         return _default_planner
 
 
+def reset_default_planner() -> None:
+    """Drop the cached process-wide planners (tests; post-calibration)."""
+    global _default_planner
+    with _default_lock:
+        _default_planner = None
+        _planners_by_discriminant.clear()
+
+
 def plan(c: Chain, env: Optional[Dict[str, int]] = None,
          discriminant: str = "perfmodel") -> Plan:
-    """Module-level convenience using a per-discriminant default planner."""
+    """Module-level convenience using a per-discriminant default planner.
+
+    Planners (and their profile-cache read) are memoised per discriminant
+    so repeated calls stay in-memory after the first.
+    """
     p = default_planner()
     if discriminant != p.discriminant:
-        p = Planner(discriminant=discriminant)
+        with _default_lock:
+            p = _planners_by_discriminant.get(discriminant)
+            if p is None:
+                p = Planner(discriminant=discriminant)
+                _planners_by_discriminant[discriminant] = p
     return p.plan(c, env)

@@ -19,7 +19,7 @@ fetch (BLAS ``trans`` flags / ``jnp.swapaxes``).
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -137,33 +137,47 @@ class BlasRunner:
         return float(np.median(ts))
 
     # -- Experiment 3: isolated kernel benchmarks -------------------------
-    def benchmark_call(self, call: KernelCall) -> float:
-        """Time one kernel call in isolation with a flushed cache."""
+    def benchmark_call(self, call: KernelCall,
+                       reps: Optional[int] = None) -> float:
+        """Time one kernel call in isolation with a flushed cache.
+
+        ``reps`` overrides the runner default for this call (the
+        calibration sweep passes it through explicitly).
+        """
+        reps = self.reps if reps is None else reps
         rng = self.rng
         if call.kind == "gemm":
             m, n, k = call.dims
             a = np.asfortranarray(rng.standard_normal((m, k)))
             b = np.asfortranarray(rng.standard_normal((k, n)))
-            fn = lambda: _blas.dgemm(1.0, a, b)
+
+            def fn():
+                return _blas.dgemm(1.0, a, b)
         elif call.kind == "syrk":
             m, k = call.dims
             a = np.asfortranarray(rng.standard_normal((m, k)))
-            fn = lambda: _blas.dsyrk(1.0, a, lower=1)
+
+            def fn():
+                return _blas.dsyrk(1.0, a, lower=1)
         elif call.kind == "symm":
             m, n = call.dims
             s = np.asfortranarray(rng.standard_normal((m, m)))
             s = np.asfortranarray(s + s.T)
             b = np.asfortranarray(rng.standard_normal((m, n)))
-            fn = lambda: _blas.dsymm(1.0, s, b, side=0, lower=1)
+
+            def fn():
+                return _blas.dsymm(1.0, s, b, side=0, lower=1)
         elif call.kind == "tri2full":
             (m,) = call.dims
             t = np.asfortranarray(np.tril(rng.standard_normal((m, m))))
-            fn = lambda: np.asfortranarray(np.tril(t) + np.tril(t, -1).T)
+
+            def fn():
+                return np.asfortranarray(np.tril(t) + np.tril(t, -1).T)
         else:
             raise ValueError(call.kind)
         fn()  # warm-up
         ts = []
-        for _ in range(self.reps):
+        for _ in range(reps):
             if self.flusher:
                 self.flusher.flush()
             t0 = time.perf_counter()
@@ -238,3 +252,77 @@ class JaxRunner:
                 if isinstance(ref, Leaf):
                     mx = max(mx, ref.index)
         return mx + 1
+
+    # -- calibration: isolated kernel benchmarks --------------------------
+    def benchmark_call(self, call: KernelCall, reps: int = 5,
+                       dtype: str = "float32",
+                       seed: int = 0) -> float:
+        """Median wall seconds for one kernel call on the JAX backend.
+
+        Mirrors :meth:`BlasRunner.benchmark_call` so the calibration sweep
+        (:mod:`repro.core.calibrate`) treats the two backends uniformly.
+        Dispatch is jitted and the result blocked on, so compile time is
+        excluded (warm-up) and async dispatch doesn't under-report.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        rng = np.random.default_rng(seed)
+
+        def arr(*shape):
+            a = jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+            if a.dtype != jnp.dtype(dtype):
+                # e.g. float64 requested with jax_enable_x64 off: JAX
+                # silently downcasts, which would stamp a fingerprint the
+                # measurements don't match.
+                raise ValueError(
+                    f"jax produced dtype {a.dtype} for requested {dtype!r} "
+                    f"(for float64, enable jax_enable_x64)")
+            return a
+
+        if call.kind == "gemm":
+            m, n, k = call.dims
+            args = (arr(m, k), arr(k, n))
+            op = jax.jit(lambda a, b: a @ b)
+        elif call.kind == "syrk":
+            m, k = call.dims
+            args = (arr(m, k),)
+            op = jax.jit(lambda a: jnp.tril(a @ jnp.swapaxes(a, -1, -2)))
+        elif call.kind == "symm":
+            m, n = call.dims
+            s = arr(m, m)
+            args = (s + jnp.swapaxes(s, -1, -2), arr(m, n))
+            op = jax.jit(lambda s, b: s @ b)
+        elif call.kind == "tri2full":
+            (m,) = call.dims
+            args = (jnp.tril(arr(m, m)),)
+            op = jax.jit(lambda t: jnp.tril(t) + jnp.swapaxes(
+                jnp.tril(t, -1), -1, -2))
+        else:
+            raise ValueError(call.kind)
+        jax.block_until_ready(op(*args))  # warm-up: compile + page-in
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(op(*args))
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+
+def measure_seconds(fn: Callable, *args) -> tuple:
+    """Run ``fn(*args)``, blocking on JAX async dispatch; (result, secs).
+
+    Used by the planner's online refinement so the recorded time reflects
+    device completion rather than dispatch-queue insertion. Deferred
+    device errors surfaced by the block propagate — recording the
+    dispatch-only time of a failed computation would poison the profile.
+    """
+    try:
+        import jax
+    except Exception:  # pragma: no cover - jax is a hard dep in practice
+        jax = None
+    t0 = time.perf_counter()
+    out = fn(*args)
+    if jax is not None:
+        jax.block_until_ready(out)  # no-op for non-JAX leaves
+    return out, time.perf_counter() - t0

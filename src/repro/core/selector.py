@@ -4,6 +4,10 @@
 * ``perfmodel`` — FLOPs weighted by kernel performance profiles (the paper's
   conclusion, productized; Experiment 3 shows it predicts 75–92 % of the
   anomalies the baseline falls into).
+* ``hybrid``    — measured table entries where a calibration has them,
+  analytical model per-call elsewhere (the paper's conjectured
+  FLOPs × perf-model combination; see :class:`~repro.core.perfmodel
+  .HybridProfile`).
 * ``measured``  — brute-force empirical selection (ground truth; only
   feasible when sizes are concrete and measurement is affordable).
 
@@ -13,13 +17,19 @@ planner takes rank 0.
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 from .algorithms import Algorithm
-from .perfmodel import AnalyticalTPUProfile, KernelProfile, predict_algorithm_time
+from .perfmodel import (
+    AnalyticalTPUProfile,
+    HybridProfile,
+    KernelProfile,
+    TableProfile,
+    predict_algorithm_time,
+)
 from .runners import BlasRunner
 
-DISCRIMINANTS = ("flops", "perfmodel", "measured")
+DISCRIMINANTS = ("flops", "perfmodel", "hybrid", "measured")
 
 
 def rank_by_flops(algos: Sequence[Algorithm]) -> List[Algorithm]:
@@ -37,6 +47,32 @@ def rank_by_perfmodel(
         key=lambda a: (predict_algorithm_time(a.calls, prof, dtype_bytes),
                        a.flops, a.name),
     )
+
+
+def as_hybrid(profile: Optional[KernelProfile]) -> HybridProfile:
+    """Coerce any profile into the hybrid (table ∨ analytical) policy.
+
+    * ``HybridProfile``   → used as-is;
+    * ``TableProfile``    → wrapped with an analytical fallback;
+    * anything else/None  → empty table over the given (or default)
+      analytical model, so every call falls through to analytical until
+      online refinement records measurements.
+    """
+    if isinstance(profile, HybridProfile):
+        return profile
+    if isinstance(profile, TableProfile):
+        return HybridProfile(profile)
+    analytical = profile or AnalyticalTPUProfile()
+    return HybridProfile(TableProfile(peak_flops=analytical.peak()),
+                         analytical=analytical)
+
+
+def rank_by_hybrid(
+    algos: Sequence[Algorithm],
+    profile: Optional[KernelProfile] = None,
+    dtype_bytes: int = 2,
+) -> List[Algorithm]:
+    return rank_by_perfmodel(algos, as_hybrid(profile), dtype_bytes)
 
 
 def rank_by_measurement(
@@ -61,6 +97,8 @@ def select(
         return rank_by_flops(algos)
     if discriminant == "perfmodel":
         return rank_by_perfmodel(algos, profile, dtype_bytes)
+    if discriminant == "hybrid":
+        return rank_by_hybrid(algos, profile, dtype_bytes)
     if discriminant == "measured":
         return rank_by_measurement(algos, runner)
     raise ValueError(

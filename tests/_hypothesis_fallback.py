@@ -1,0 +1,79 @@
+"""Deterministic mini-implementation of the `hypothesis` API this suite uses.
+
+The container may lack `hypothesis` (it is a test extra: install via
+``pip install -e .[test]``). Rather than losing three test modules to
+collection errors, ``conftest.py`` registers this shim in ``sys.modules``
+when the real library is absent. It covers exactly the surface the tests
+use — ``@settings(max_examples=…, deadline=…)``, ``@given(**strategies)``,
+``strategies.integers`` and ``strategies.sampled_from`` — and draws
+examples from a fixed-seed PRNG, so the fallback is deterministic (no
+shrinking, no database, no edge-case bias: strictly weaker than real
+hypothesis, strictly better than not running the tests).
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+from typing import Any, Callable, Dict
+
+_DEFAULT_MAX_EXAMPLES = 100
+_SEED = 0x5EED_CAFE
+
+
+class SearchStrategy:
+    """A draw rule: PRNG -> example value."""
+
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def example_at(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(elements) -> SearchStrategy:
+    seq = list(elements)
+    return SearchStrategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+def given(**strategies: SearchStrategy):
+    """Run the test once per drawn example (order-stable across runs)."""
+
+    def decorate(fn: Callable) -> Callable:
+        @functools.wraps(fn)
+        def runner(*args, **kwargs):
+            n = getattr(runner, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+            names = sorted(strategies)
+            for i in range(n):
+                rng = random.Random((_SEED, i))
+                drawn: Dict[str, Any] = {
+                    name: strategies[name].example_at(rng) for name in names
+                }
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (shim, draw {i}): {drawn}"
+                    ) from e
+        # pytest must see the zero-arg wrapper signature, not the wrapped
+        # test's (else drawn params look like missing fixtures).
+        del runner.__wrapped__
+        runner._hypothesis_shim = True
+        return runner
+
+    return decorate
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES,
+             deadline=None, **_ignored):
+    """Accepts (and mostly ignores) real-hypothesis knobs."""
+
+    def decorate(fn: Callable) -> Callable:
+        fn._max_examples = max_examples
+        return fn
+
+    return decorate

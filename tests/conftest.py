@@ -1,0 +1,47 @@
+"""Test-session plumbing.
+
+* Registers the deterministic fallback shim for `hypothesis` when the real
+  library is not installed (it is an extra: ``pip install -e .[test]``),
+  so the suite collects and runs everywhere the core deps exist.
+* Isolates the profile cache: tests must never read a developer's real
+  calibration (or write into it), so the cache is pointed at a per-session
+  temp dir and the process-wide planner is reset around the session.
+"""
+
+import importlib.util
+import os
+import pathlib
+import sys
+import tempfile
+import types
+
+
+def _register_hypothesis_fallback() -> None:
+    if importlib.util.find_spec("hypothesis") is not None:
+        return  # real hypothesis available; use it
+    shim_path = pathlib.Path(__file__).parent / "_hypothesis_fallback.py"
+    spec = importlib.util.spec_from_file_location(
+        "_hypothesis_fallback", shim_path)
+    shim = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(shim)
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = shim.given
+    mod.settings = shim.settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.integers = shim.integers
+    strategies.sampled_from = shim.sampled_from
+    strategies.SearchStrategy = shim.SearchStrategy
+    mod.strategies = strategies
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies
+
+
+_register_hypothesis_fallback()
+
+# Point the profile cache away from the developer's real one for the whole
+# session (individual tests override with their own tmp dirs as needed).
+# Unconditional: a pre-existing REPRO_PROFILE_DIR would otherwise leak the
+# machine's real calibration into rankings the tests observe.
+os.environ["REPRO_PROFILE_DIR"] = tempfile.mkdtemp(
+    prefix="repro-test-profiles-")

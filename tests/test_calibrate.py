@@ -1,0 +1,293 @@
+"""Calibration subsystem: persistence round-trips, fingerprint gating,
+hybrid fallback, online refinement, and the tri2full nearest-neighbour
+regression (ISSUE 1)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AnalyticalTPUProfile,
+    FingerprintMismatchError,
+    HardwareFingerprint,
+    HybridProfile,
+    Planner,
+    ProfileStoreError,
+    TableProfile,
+    current_fingerprint,
+    default_planner,
+    gram_times,
+    load_default_profile,
+    load_profile,
+    profile_path,
+    reset_default_planner,
+    save_profile,
+    select,
+    sweep_kernels,
+)
+from repro.core.algorithms import enumerate_algorithms
+from repro.core.calibrate import (
+    GRIDS,
+    calibrate,
+    grid_calls,
+    main as calibrate_main,
+)
+from repro.core.flops import gemm, symm, syrk, tri2full
+from repro.core.runners import BlasRunner
+
+
+FP = HardwareFingerprint(backend="blas", device="testdev", dtype="float64")
+
+
+def _sample_profile() -> TableProfile:
+    return TableProfile(peak_flops=5e10, table={
+        ("gemm", (128, 128, 128)): 1.1e-4,
+        ("gemm", (256, 64, 128)): 9.0e-5,
+        ("syrk", (128, 128)): 7.5e-5,
+        ("symm", (128, 64)): 6.0e-5,
+        ("tri2full", (64,)): 1.0e-5,
+        ("tri2full", (1024,)): 1.3e-3,
+    })
+
+
+# ------------------------------------------------------------ persistence --
+
+def test_roundtrip_identical_predictions(tmp_path):
+    prof = _sample_profile()
+    path = save_profile(prof, FP, directory=tmp_path)
+    loaded, fp = load_profile(path, expected_fingerprint=FP)
+    assert fp == FP
+    assert loaded.table == prof.table
+    assert loaded.peak() == prof.peak()
+    # identical predictions on exact hits AND nearest-neighbour queries
+    queries = [gemm(128, 128, 128), gemm(200, 100, 128), syrk(96, 128),
+               symm(130, 70), tri2full(100)]
+    for call in queries:
+        assert loaded.time(call) == pytest.approx(prof.time(call), rel=0,
+                                                  abs=0)
+
+
+def test_fingerprint_mismatch_rejected(tmp_path):
+    path = save_profile(_sample_profile(), FP, directory=tmp_path)
+    other = HardwareFingerprint(backend="jax", device="TPU v5e",
+                                dtype="bfloat16")
+    with pytest.raises(FingerprintMismatchError):
+        load_profile(path, expected_fingerprint=other)
+    # without an expectation, the stored fingerprint is simply returned
+    _, fp = load_profile(path)
+    assert fp == FP
+
+
+def test_schema_version_and_corruption_rejected(tmp_path):
+    path = save_profile(_sample_profile(), FP, directory=tmp_path)
+    doc = json.loads(path.read_text())
+    doc["version"] = 999
+    path.write_text(json.dumps(doc))
+    with pytest.raises(ProfileStoreError):
+        load_profile(path)
+    path.write_text("{not json")
+    with pytest.raises(ProfileStoreError):
+        load_profile(path)
+
+
+def test_load_default_profile_roundtrip(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_PROFILE_DIR", str(tmp_path))
+    monkeypatch.delenv("REPRO_NO_PROFILE_CACHE", raising=False)
+    assert load_default_profile() is None  # empty cache
+    fp = current_fingerprint()
+    save_profile(_sample_profile(), fp, directory=tmp_path)
+    loaded = load_default_profile()
+    assert loaded is not None
+    assert loaded.table == _sample_profile().table
+    # kill switch
+    monkeypatch.setenv("REPRO_NO_PROFILE_CACHE", "1")
+    assert load_default_profile() is None
+
+
+def test_corrupt_default_cache_degrades_to_none(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_PROFILE_DIR", str(tmp_path))
+    fp = current_fingerprint()
+    profile_path(fp).parent.mkdir(parents=True, exist_ok=True)
+    profile_path(fp).write_text("garbage")
+    assert load_default_profile() is None
+
+
+# ----------------------------------------------------------------- hybrid --
+
+def test_hybrid_uses_table_near_and_analytical_far():
+    prof = _sample_profile()
+    hy = HybridProfile(prof)
+    near = gemm(130, 130, 130)        # within tolerance of (128,128,128)
+    far = gemm(8192, 8192, 8192)      # far outside the calibrated grid
+    assert hy.source(near) == "table"
+    assert hy.source(far) == "analytical"
+    assert hy.time(near) == pytest.approx(prof.time(near))
+    assert hy.time(far) == pytest.approx(
+        AnalyticalTPUProfile().time(far))
+    # a kind with no entries at all falls back too
+    empty = HybridProfile(TableProfile(1e11))
+    assert empty.source(syrk(100, 100)) == "analytical"
+
+
+def test_hybrid_discriminant_select():
+    algos = enumerate_algorithms(gram_times(300, 200, 100))
+    ranked = select(algos, discriminant="hybrid", profile=_sample_profile())
+    assert len(ranked) == len(algos)
+    # deterministic, complete ranking (no algorithm lost to KeyError)
+    assert {a.name for a in ranked} == {a.name for a in algos}
+
+
+def test_hybrid_empty_table_matches_analytical_ranking():
+    algos = enumerate_algorithms(gram_times(300, 200, 100))
+    analytical = select(algos, discriminant="perfmodel")
+    hybrid = select(algos, discriminant="hybrid",
+                    profile=HybridProfile(TableProfile(
+                        AnalyticalTPUProfile().peak())))
+    assert [a.name for a in analytical] == [a.name for a in hybrid]
+
+
+# ----------------------------------------------- tri2full NN (regression) --
+
+def test_tri2full_nearest_neighbour_picks_closest_dim():
+    # Far entry first in insertion order: the old code scaled from the
+    # first table hit, yielding a wildly wrong estimate for small dims.
+    prof = TableProfile(1e11, table={
+        ("tri2full", (1024,)): 1.3e-3,
+        ("tri2full", (64,)): 1.0e-5,
+    })
+    t = prof.time(tri2full(100))
+    assert t == pytest.approx(1.0e-5 * 100 ** 2 / 64 ** 2)
+    t_big = prof.time(tri2full(900))
+    assert t_big == pytest.approx(1.3e-3 * 900 ** 2 / 1024 ** 2)
+
+
+# ------------------------------------------------------------ calibration --
+
+def test_grid_calls_cover_all_kernels():
+    calls = grid_calls(GRIDS["small"])
+    kinds = {c.kind for c in calls}
+    assert kinds == {"gemm", "syrk", "symm", "tri2full"}
+    n = len(GRIDS["small"])
+    assert len(calls) == n ** 3 + 2 * n ** 2 + n
+    assert len(set(calls)) == len(calls)
+
+
+def test_sweep_and_calibrate_blas(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_PROFILE_DIR", str(tmp_path))
+    res = calibrate(backend="blas", grid="small", reps=1)
+    assert res.path is not None and res.path.is_file()
+    assert res.n_calls == len(grid_calls(GRIDS["small"]))
+    assert all(t >= 0 for t in res.profile.table.values())
+    assert res.profile.peak() > 1.0
+    # ...and default_planner() auto-loads it
+    reset_default_planner()
+    try:
+        p = default_planner()
+        assert isinstance(p.profile, HybridProfile)
+        assert p.profile.table_profile.table == res.profile.table
+    finally:
+        reset_default_planner()
+
+
+def test_calibrate_cli_writes_profile(tmp_path, capsys):
+    rc = calibrate_main(["--grid", "small", "--reps", "1",
+                         "--out", str(tmp_path), "--quiet"])
+    assert rc == 0
+    files = list(tmp_path.glob("profile-*.json"))
+    assert len(files) == 1
+    doc = json.loads(files[0].read_text())
+    assert doc["version"] == 1
+    assert doc["meta"]["grid"] == "small"
+    assert len(doc["entries"]) == len(grid_calls(GRIDS["small"]))
+    out = capsys.readouterr().out
+    assert "profile written to" in out
+
+
+def test_sweep_kernels_with_tiny_custom_runner():
+    class FakeRunner(BlasRunner):
+        def benchmark_call(self, call, reps=None):
+            return 1e-6 * max(1, call.flops) ** 0.5
+
+    prof = sweep_kernels(FakeRunner(reps=1), (64, 128))
+    assert ("gemm", (64, 128, 64)) in prof.table
+    assert prof.peak() > 1.0
+
+
+# ------------------------------------------------------ online refinement --
+
+def test_planner_online_refinement_records_and_blends():
+    table = TableProfile(1e11)
+    planner = Planner(discriminant="hybrid", profile=HybridProfile(table),
+                      record=True, dtype_bytes=4)
+    c = gram_times(96, 64, 32)
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((96, 64)).astype(np.float32)
+    b = rng.standard_normal((96, 32)).astype(np.float32)
+    out = planner(c, a, a, b)
+    assert out.shape == (96, 32)
+    assert len(table.table) > 0
+    first = dict(table.table)
+    planner(c, a, a, b)
+    # EMA blend: entries move but stay positive
+    assert set(table.table) == set(first)
+    assert all(v > 0 for v in table.table.values())
+
+
+def test_planner_bootstrap_from_empty_table():
+    """Regression: record=True on an empty TableProfile must record its
+    first entries (analytical weights), not die with KeyError."""
+    table = TableProfile(1e11)
+    planner = Planner(discriminant="flops", profile=table, record=True)
+    c = gram_times(64, 32, 16)
+    rng = np.random.default_rng(2)
+    a = rng.standard_normal((64, 32)).astype(np.float32)
+    b = rng.standard_normal((64, 16)).astype(np.float32)
+    out = planner(c, a, a, b)
+    assert out.shape == (64, 16)
+    assert len(table.table) > 0
+
+
+def test_planner_observe_noop_on_analytical_profile():
+    planner = Planner(profile=AnalyticalTPUProfile(), record=True)
+    c = gram_times(64, 32, 16)
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal((64, 32)).astype(np.float32)
+    b = rng.standard_normal((64, 16)).astype(np.float32)
+    out = planner(c, a, a, b)  # must not raise despite no table
+    assert out.shape == (64, 16)
+
+
+def test_planner_save_roundtrip(tmp_path):
+    table = TableProfile(2e10, table={("gemm", (64, 64, 64)): 3e-6})
+    planner = Planner(discriminant="hybrid", profile=HybridProfile(table))
+    path = planner.save(directory=tmp_path)
+    assert path is not None
+    loaded, _ = load_profile(path)
+    assert loaded.table == table.table
+
+
+def test_planner_save_key_matches_resolve_key(tmp_path, monkeypatch):
+    """Regression: save() must persist under the same fingerprint that
+    resolve_profile() loads from, or refinements are never reloaded."""
+    monkeypatch.setenv("REPRO_PROFILE_DIR", str(tmp_path))
+    monkeypatch.delenv("REPRO_NO_PROFILE_CACHE", raising=False)
+    table = TableProfile(2e10, table={("gemm", (64, 64, 64)): 3e-6})
+    Planner(profile=HybridProfile(table)).save()
+    fresh = Planner()  # new process, same machine: must see the save
+    assert isinstance(fresh.profile, HybridProfile)
+    assert fresh.profile.table_profile.table == table.table
+
+
+def test_observe_mixed_sources_does_not_poison_table():
+    """Regression: apportioning weights come from one consistent model,
+    so a measured-ms entry can't starve an analytical-µs call's share."""
+    table = TableProfile(1e11, table={("syrk", (96, 64)): 5e-3})
+    hy = HybridProfile(table, max_log_dist=1e-9)  # symm call -> analytical
+    planner = Planner(discriminant="hybrid", profile=hy, record=True)
+    plan = planner.plan(gram_times(96, 64, 32))
+    planner.observe(plan, seconds=1.0)
+    # every call in the winning algorithm got a non-negligible share
+    for call in plan.algorithm.calls:
+        t = table.table[(call.kind, call.dims)]
+        assert t > 1e-4, (call, t)
