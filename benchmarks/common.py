@@ -8,12 +8,42 @@ raised with REPRO_BENCH_SCALE=full.
 
 from __future__ import annotations
 
+import functools
 import os
 import sys
 import time
 from typing import Callable
 
 FULL = os.environ.get("REPRO_BENCH_SCALE", "ci") == "full"
+
+#: Worker shards for the sweep engine (REPRO_SWEEP_SHARDS=4 fans the
+#: experiment benchmarks out over a process pool; 1 = serial).
+SHARDS = max(1, int(os.environ.get("REPRO_SWEEP_SHARDS", "1")))
+
+
+def engine_kwargs(reps: int) -> dict:
+    """Sweep-engine fan-out shared by every experiment benchmark."""
+    if SHARDS > 1:
+        from repro.core.runners import BlasRunner
+        return {
+            "backend": "process",
+            "shards": SHARDS,
+            "runner_factory": functools.partial(BlasRunner, reps=reps),
+        }
+    return {}
+
+
+def open_atlas(spec_name: str, threshold: float):
+    """The persistent atlas the experiment benchmarks stream into.
+
+    Uses the default atlas directory ($REPRO_ATLAS_DIR or the shared
+    cache), keyed by this machine's BLAS fingerprint — repeat benchmark
+    runs resume from it instead of re-measuring.
+    """
+    from repro.core import AnomalyAtlas
+    from repro.core.profile_store import current_fingerprint
+    return AnomalyAtlas.open(spec_name, current_fingerprint(),
+                             threshold=threshold)
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

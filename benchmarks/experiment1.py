@@ -1,6 +1,11 @@
 """Paper Experiment 1 (§3.4.1): random search for anomalies — abundance
 and severity, for both expressions.
 
+Thin config over the sweep engine: sampling/measurement go through
+:func:`repro.core.sweep.sweep` (shardable with REPRO_SWEEP_SHARDS=N) and
+every classified instance streams into the persistent anomaly atlas, so
+repeat runs resume instead of re-measuring.
+
 Paper-scale: box [20,1200], 100/1000 anomalies, 23k/10k samples.
 CI-scale default: box [20,600], stop after N_ANOM anomalies or MAX samples.
 """
@@ -16,20 +21,27 @@ from repro.core import (
     experiment1_random_search,
 )
 
-from .common import FULL, emit, note
+from .common import FULL, emit, engine_kwargs, note, open_atlas
 
 
 def run_spec(spec, box, n_anom, max_samples, reps, threshold=0.10,
              seed=0):
-    runner = BlasRunner(reps=reps)
-    res = experiment1_random_search(
-        spec, runner, box=box, n_anomalies=n_anom,
-        max_samples=max_samples, threshold=threshold, seed=seed)
+    # Sharded runs build per-worker runners from engine_kwargs' factory;
+    # the (64 MB flush buffer) serial runner exists only when used.
+    kwargs = engine_kwargs(reps)
+    runner = None if kwargs else BlasRunner(reps=reps)
+    with open_atlas(spec.name, threshold) as atlas:
+        n_cached = len(atlas)
+        res = experiment1_random_search(
+            spec, runner, box=box, n_anomalies=n_anom,
+            max_samples=max_samples, threshold=threshold, seed=seed,
+            atlas=atlas, **kwargs)
     ts = [i.cls.time_score for i in res.anomalies]
     fs = [i.cls.flop_score for i in res.anomalies]
     note(f"\n== Experiment 1: {spec.name} ==")
     note(f"samples={res.samples} anomalies={len(res.anomalies)} "
-         f"abundance={res.abundance:.2%} wall={res.wall_s:.0f}s")
+         f"abundance={res.abundance:.2%} wall={res.wall_s:.0f}s "
+         f"(atlas held {n_cached} instances going in)")
     if ts:
         note(f"time_score:  max={max(ts):.1%} median={np.median(ts):.1%}")
         note(f"flop_score:  max={max(fs):.1%} median={np.median(fs):.1%}")

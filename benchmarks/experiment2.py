@@ -1,6 +1,10 @@
 """Paper Experiment 2 (§3.4.2): axis-aligned lines through anomalous
 regions — region thickness distribution per dimension.
 
+Thin config over the sweep engine: the seed search shards via
+REPRO_SWEEP_SHARDS and both the seeds and every line probe persist in the
+anomaly atlas, so a re-run traverses from cached classifications.
+
 Seeds come from a short Experiment-1 search; each seed is traversed in
 every dimension with step 10, hole tolerance 2, boundary = 3 consecutive
 non-anomalies (the paper's protocol, threshold 5 %).
@@ -18,21 +22,25 @@ from repro.core import (
     experiment2_regions,
 )
 
-from .common import FULL, emit, note
+from .common import FULL, emit, engine_kwargs, note, open_atlas
 
 
 def run_spec(spec, box, n_seeds, reps):
-    runner = BlasRunner(reps=reps)
-    seeds = experiment1_random_search(
-        spec, runner, box=box, n_anomalies=n_seeds,
-        max_samples=2500 if FULL else 250, threshold=0.10, seed=7)
+    runner = BlasRunner(reps=reps)  # used by the serial probes below
+    kwargs = engine_kwargs(reps)
+    with open_atlas(spec.name, 0.10) as seed_atlas:
+        seeds = experiment1_random_search(
+            spec, None if kwargs else runner, box=box, n_anomalies=n_seeds,
+            max_samples=2500 if FULL else 250, threshold=0.10, seed=7,
+            atlas=seed_atlas, **kwargs)
     if not seeds.anomalies:
         note(f"Experiment 2 {spec.name}: no anomalies found in budget; "
              "skipping region scan")
         emit(f"exp2_{spec.name}_thickness", 0.0, "no_anomalies")
         return None
-    res = experiment2_regions(spec, runner, seeds.anomalies, box=box,
-                              threshold=0.05)
+    with open_atlas(spec.name, 0.05) as atlas:
+        res = experiment2_regions(spec, runner, seeds.anomalies, box=box,
+                                  threshold=0.05, atlas=atlas)
     note(f"\n== Experiment 2: {spec.name} "
          f"({len(seeds.anomalies)} seeds) ==")
     by_dim = {}

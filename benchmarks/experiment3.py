@@ -1,6 +1,12 @@
 """Paper Experiment 3 (§3.4.3): predict anomalies from isolated kernel
 benchmarks (the additive model) — confusion matrix vs measured truth.
 
+Thin config over the sweep engine: ground-truth measurement shards via
+REPRO_SWEEP_SHARDS and persists in the anomaly atlas; the isolated kernel
+benchmarks are deduplicated (batched) and seeded from / persisted back to
+the machine's calibration cache, so only never-seen (kind, dims) calls are
+timed.
+
 Paper results: ABCD recall 92 %/precision 96 %; AAᵀB recall 75 %/
 precision 98.5 %. The qualitative claim under test: *most anomalies are
 predictable from per-kernel profiles alone* — the basis for the
@@ -21,32 +27,35 @@ from repro.core import (
     save_profile,
 )
 
-from .common import FULL, emit, note
+from .common import FULL, emit, engine_kwargs, note, open_atlas
 
 
 def run_spec(spec, box, n_seeds, reps):
-    runner = BlasRunner(reps=reps)
-    seeds = experiment1_random_search(
-        spec, runner, box=box, n_anomalies=n_seeds,
-        max_samples=2500 if FULL else 250, threshold=0.10, seed=11)
+    runner = BlasRunner(reps=reps)  # used by the serial probes below
+    kwargs = engine_kwargs(reps)
+    with open_atlas(spec.name, 0.10) as seed_atlas:
+        seeds = experiment1_random_search(
+            spec, None if kwargs else runner, box=box, n_anomalies=n_seeds,
+            max_samples=2500 if FULL else 250, threshold=0.10, seed=11,
+            atlas=seed_atlas, **kwargs)
     if not seeds.anomalies:
         note(f"Experiment 3 {spec.name}: no anomaly seeds in budget")
         emit(f"exp3_{spec.name}_recall", 0.0, "no_anomalies")
         return
-    regions = experiment2_regions(spec, runner, seeds.anomalies, box=box,
-                                  threshold=0.05)
+    with open_atlas(spec.name, 0.05) as atlas:
+        regions = experiment2_regions(spec, runner, seeds.anomalies,
+                                      box=box, threshold=0.05, atlas=atlas)
     # Seed from the machine's persisted calibration (only unmeasured calls
-    # are benchmarked), then persist the enriched table back.
+    # are benchmarked, deduplicated across all instances), then persist the
+    # enriched table back.
     cached = load_default_profile()
-    n_cached = len(cached.table) if cached is not None else 0
     res = experiment3_predict_from_benchmarks(
         spec, runner, regions.classified, threshold=0.05, profile=cached)
     save_profile(res.profile, current_fingerprint(),
                  meta={"source": f"experiment3:{spec.name}"})
     note(f"\n== Experiment 3: {spec.name} ==")
-    if n_cached:
-        note(f"(reused {n_cached} persisted kernel timings; "
-             f"{len(res.profile.table) - n_cached} newly measured)")
+    note(f"(kernel calls: {res.n_calls_reused} reused from the "
+         f"calibration cache, {res.n_calls_measured} newly measured)")
     note(res.confusion.as_table())
     emit(f"exp3_{spec.name}_recall", res.confusion.recall * 100,
          f"precision={res.confusion.precision:.3f};"

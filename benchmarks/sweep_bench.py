@@ -1,0 +1,69 @@
+"""Sweep-engine throughput: serial vs sharded grid sweeps (instances/sec).
+
+Measures the engine itself, not the kernels: a fixed AAᵀB grid is swept
+once serially and once over a process pool, with cache flushing off and
+reps=1 so the denominator is engine + dispatch overhead rather than BLAS
+time. Derived fields report instances/sec and the sharded speedup; the
+atlas write path is exercised in a throwaway directory so persistence cost
+is included.
+
+REPRO_BENCH_SCALE=full uses a denser grid and more shards.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import tempfile
+from pathlib import Path
+
+from repro.core import BlasRunner
+from repro.core.profile_store import current_fingerprint
+from repro.core.sweep import GRAM_AATB, AnomalyAtlas, GridSpec, sweep
+
+from .common import FULL, emit, note
+
+
+def _run(points, backend, shards, factory, atlas_dir):
+    atlas = AnomalyAtlas.open(
+        GRAM_AATB.name, current_fingerprint(), threshold=0.10,
+        directory=Path(atlas_dir) / f"{backend}{shards or 0}")
+    if backend == "serial":
+        res = sweep(GRAM_AATB, points, runner=factory(), atlas=atlas)
+    else:
+        res = sweep(GRAM_AATB, points, backend=backend, shards=shards,
+                    runner_factory=factory, atlas=atlas)
+    atlas.flush()
+    return res
+
+
+def main():
+    values = (32, 64, 96, 128) if FULL else (32, 64, 96)
+    shards = min(8 if FULL else 2, os.cpu_count() or 1)
+    grid = GridSpec.uniform(values, GRAM_AATB.ndims, name="bench")
+    points = grid.points()
+    factory = functools.partial(BlasRunner, reps=1, flush_cache=False)
+
+    note(f"\n== sweep engine: {len(points)} AAᵀB instances, "
+         f"{shards} shards ==")
+    with tempfile.TemporaryDirectory() as atlas_dir:
+        serial = _run(points, "serial", None, factory, atlas_dir)
+        sharded = _run(points, "process", shards, factory, atlas_dir)
+
+    note(f"serial : {serial.instances_per_s:8.1f} inst/s "
+         f"({serial.wall_s:.2f}s)")
+    note(f"sharded: {sharded.instances_per_s:8.1f} inst/s "
+         f"({sharded.wall_s:.2f}s, {shards} procs)")
+    speedup = (sharded.instances_per_s / serial.instances_per_s
+               if serial.instances_per_s else 0.0)
+    note(f"speedup: {speedup:.2f}x")
+
+    emit("sweep_serial", serial.wall_s * 1e6 / max(1, serial.n_measured),
+         f"inst_per_s={serial.instances_per_s:.2f};n={serial.n_measured}")
+    emit("sweep_sharded", sharded.wall_s * 1e6 / max(1, sharded.n_measured),
+         f"inst_per_s={sharded.instances_per_s:.2f};"
+         f"shards={shards};speedup={speedup:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,17 +13,15 @@ from .algorithms import (
     enumerate_algorithms,
     optimal_chain_order,
 )
-from .anomaly import Classification, ConfusionMatrix, classify, scan_line
-from .expr import Chain, Matrix, Transpose, chain, gram_times, matrix_chain
-from .experiments import (
-    GRAM_AATB,
-    MATRIX_CHAIN_ABCD,
-    ExpressionSpec,
-    experiment1_random_search,
-    experiment2_regions,
-    experiment3_predict_from_benchmarks,
-    measure_instance,
+from .anomaly import (
+    Classification,
+    ConfusionMatrix,
+    Region,
+    classify,
+    cluster_regions,
+    scan_line,
 )
+from .expr import Chain, Matrix, Transpose, chain, gram_times, matrix_chain
 from .flops import KernelCall, gemm, kernel_flops, symm, syrk, total_flops, tri2full
 from .perfmodel import (
     TPU_V5E,
@@ -55,23 +53,57 @@ from .profile_store import (
 from .runners import BlasRunner, JaxRunner, measure_seconds
 from .selector import DISCRIMINANTS, as_hybrid, select
 
-# Lazy (PEP 562) so `python -m repro.core.calibrate` doesn't import the
-# CLI module twice (runpy warns when the target is already in sys.modules).
-# NB `repro.core.calibrate` names the *submodule* (like os.path); the
-# function is `repro.core.calibrate.calibrate`.
-_CALIBRATE_EXPORTS = ("GRIDS", "CalibrationResult", "sweep_kernels")
+# Lazy (PEP 562) so `python -m repro.core.calibrate` / `python -m
+# repro.core.sweep` don't import their CLI modules twice (runpy warns when
+# the target is already in sys.modules). NB `repro.core.calibrate` /
+# `repro.core.sweep` name the *submodules* (like os.path); the entry-point
+# functions are `repro.core.calibrate.calibrate` / `repro.core.sweep.sweep`.
+_LAZY_EXPORTS = {
+    "GRIDS": ".calibrate",
+    "CalibrationResult": ".calibrate",
+    "sweep_kernels": ".calibrate",
+    # sweep engine (the `sweep` *function* stays module-scoped to keep the
+    # submodule name unambiguous, mirroring calibrate)
+    "SWEEP_GRIDS": ".sweep",
+    "AnomalyAtlas": ".sweep",
+    "AtlasError": ".sweep",
+    "GridSpec": ".sweep",
+    "Instance": ".sweep",
+    "SweepResult": ".sweep",
+    "atlas_path": ".sweep",
+    "benchmark_unique_calls": ".sweep",
+    "cluster_sweep": ".sweep",
+    "collect_unique_calls": ".sweep",
+    "predict_classifications": ".sweep",
+    # paper harnesses (import scipy-backed runners; lazy keeps base import
+    # light and keeps `sweep` out of sys.modules at package import)
+    "GRAM_AATB": ".experiments",
+    "MATRIX_CHAIN_ABCD": ".experiments",
+    "ExpressionSpec": ".experiments",
+    "experiment1_random_search": ".experiments",
+    "experiment2_regions": ".experiments",
+    "experiment3_predict_from_benchmarks": ".experiments",
+    "measure_instance": ".experiments",
+}
 
 
 def __getattr__(name):
-    if name in _CALIBRATE_EXPORTS:
+    target = _LAZY_EXPORTS.get(name)
+    if target is not None:
         import importlib
-        mod = importlib.import_module(".calibrate", __name__)
-        return getattr(mod, name)
+        mod = importlib.import_module(target, __name__)
+        value = getattr(mod, name)
+        globals()[name] = value  # cache: later lookups skip __getattr__
+        return value
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "Algorithm", "enumerate_algorithms", "optimal_chain_order",
-    "Classification", "ConfusionMatrix", "classify", "scan_line",
+    "Classification", "ConfusionMatrix", "Region", "classify",
+    "cluster_regions", "scan_line",
+    "SWEEP_GRIDS", "AnomalyAtlas", "AtlasError", "GridSpec", "Instance",
+    "SweepResult", "atlas_path", "benchmark_unique_calls", "cluster_sweep",
+    "collect_unique_calls", "predict_classifications",
     "Chain", "Matrix", "Transpose", "chain", "gram_times", "matrix_chain",
     "GRAM_AATB", "MATRIX_CHAIN_ABCD", "ExpressionSpec",
     "experiment1_random_search", "experiment2_regions",

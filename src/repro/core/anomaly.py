@@ -10,11 +10,25 @@ Experiments 2–3).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, Iterable, List, Mapping, Sequence, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
 class Classification:
+    """Per-instance verdict plus the paper's two severity scores.
+
+    ``time_score`` is (T_cheapest − T_fastest) / T_cheapest ∈ [0, 1): the
+    fraction of runtime lost by minimising FLOPs instead of time.
+
+    ``flop_score`` is (F_fastest − F_cheapest) / F_fastest ∈ [0, 1): the
+    fraction of FLOPs that buying the *fastest* algorithm costs extra.
+    **Convention:** ``F_fastest`` is the FLOP count of the FLOP-cheapest
+    member of the fastest set — when several algorithms tie for fastest
+    (within ``rel_tol``), the score charges only the cheapest way of being
+    fastest, so ties never inflate severity. Both scores are 0 whenever
+    their denominator is 0.
+    """
+
     is_anomaly: bool
     time_score: float   # (T_cheapest − T_fastest) / T_cheapest ∈ [0, 1)
     flop_score: float   # (F_fastest − F_cheapest) / F_fastest ∈ [0, 1)
@@ -130,6 +144,109 @@ def scan_line(
         for coord, c in points.items()
     )
     return RegionScan(dim=dim, origin=origin, points=pts, lo=lo, hi=hi)
+
+
+@dataclasses.dataclass(frozen=True)
+class Region:
+    """One contiguous anomalous region of the problem-size grid.
+
+    The paper's central empirical claim (§3.4.2) is that anomalies are not
+    isolated points but "cluster into large contiguous regions"; a Region
+    is one connected component of anomalous grid points (adjacency =
+    neighbouring grid coordinates along exactly one axis), with severity
+    summaries over its members.
+    """
+
+    points: Tuple[Tuple[int, ...], ...]     # sorted member instances
+    lo: Tuple[int, ...]                     # bounding box, inclusive
+    hi: Tuple[int, ...]
+    mean_time_score: float
+    max_time_score: float
+    mean_flop_score: float
+    max_flop_score: float
+
+    @property
+    def size(self) -> int:
+        return len(self.points)
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (f"Region(size={self.size}, bbox={self.lo}..{self.hi}, "
+                f"ts_max={self.max_time_score:.1%})")
+
+
+def cluster_regions(
+    scores: Mapping[Tuple[int, ...], Tuple[float, float]],
+    axes: Sequence[Sequence[int]],
+) -> List[Region]:
+    """Connected components of anomalous grid points (paper's regions).
+
+    ``scores`` maps each *anomalous* point to its ``(time_score,
+    flop_score)``; ``axes`` gives the full grid (one sorted value sequence
+    per dimension), which defines adjacency: two points are neighbours when
+    they agree on all axes but one, and differ by exactly one grid position
+    on that axis (so irregular spacings still cluster correctly — adjacency
+    is positional, not metric). Points outside the grid raise ``KeyError``.
+
+    Returns regions sorted by size (largest first), ties broken by the
+    smallest member point, so output is deterministic.
+    """
+    index = [
+        {int(v): i for i, v in enumerate(ax)} for ax in axes
+    ]
+    coords = {}
+    for p in scores:
+        coords[p] = tuple(index[d][int(v)] for d, v in enumerate(p))
+    by_coord = {c: p for p, c in coords.items()}
+
+    seen = set()
+    regions: List[Region] = []
+    for start in sorted(scores):
+        if start in seen:
+            continue
+        members: List[Tuple[int, ...]] = []
+        stack = [start]
+        seen.add(start)
+        while stack:
+            p = stack.pop()
+            members.append(p)
+            c = coords[p]
+            for d in range(len(c)):
+                for step in (-1, +1):
+                    nb = c[:d] + (c[d] + step,) + c[d + 1:]
+                    q = by_coord.get(nb)
+                    if q is not None and q not in seen:
+                        seen.add(q)
+                        stack.append(q)
+        members.sort()
+        ts = [scores[p][0] for p in members]
+        fs = [scores[p][1] for p in members]
+        regions.append(Region(
+            points=tuple(members),
+            lo=tuple(min(p[d] for p in members) for d in range(len(start))),
+            hi=tuple(max(p[d] for p in members) for d in range(len(start))),
+            mean_time_score=sum(ts) / len(ts),
+            max_time_score=max(ts),
+            mean_flop_score=sum(fs) / len(fs),
+            max_flop_score=max(fs),
+        ))
+    regions.sort(key=lambda r: (-r.size, r.points[0]))
+    return regions
+
+
+def region_summary(regions: Iterable[Region], n_points: int) -> str:
+    """Human-readable digest of a clustering pass (CLI / benchmarks)."""
+    regions = list(regions)
+    n_anom = sum(r.size for r in regions)
+    rate = n_anom / n_points if n_points else 0.0
+    lines = [f"anomalies: {n_anom}/{n_points} ({rate:.1%}) in "
+             f"{len(regions)} region(s)"]
+    for i, r in enumerate(regions[:10]):
+        lines.append(
+            f"  region {i + 1}: size={r.size} bbox={r.lo}..{r.hi} "
+            f"ts mean={r.mean_time_score:.1%} max={r.max_time_score:.1%}")
+    if len(regions) > 10:
+        lines.append(f"  ... {len(regions) - 10} more")
+    return "\n".join(lines)
 
 
 @dataclasses.dataclass

@@ -1,4 +1,4 @@
-"""The paper's three experiments (§3.4), as reusable harnesses.
+"""The paper's three experiments (§3.4), as thin harnesses over the engine.
 
 * Experiment 1 — random search over an instance box: abundance + severity.
 * Experiment 2 — axis-aligned line traversal around found anomalies: region
@@ -6,76 +6,55 @@
 * Experiment 3 — predict anomalies from *isolated* kernel benchmarks
   (additive model), confusion matrix vs measured ground truth.
 
-Each harness takes an ``ExpressionSpec`` (how to build the chain for an
-instance tuple) and a :class:`~repro.core.runners.BlasRunner`, so the same
-code reproduces both paper expressions and extends to new ones.
+All measurement goes through :func:`repro.core.sweep.sweep` — the one
+measurement path shared with grid sweeps and the benchmarks — so every
+experiment can shard across workers (``backend``/``shards``/
+``runner_factory``) and stream results into a persistent
+:class:`~repro.core.sweep.AnomalyAtlas` (``atlas=``), making repeated runs
+resume instead of re-measure. Experiment 3's isolated kernel benchmarks are
+deduplicated and fed through the calibration cache
+(:mod:`repro.core.profile_store`).
 
 Scaled-down defaults: the paper used boxes up to 1200 with 10–23k samples on
 a 10-core Xeon with MKL; the benchmarks here default to smaller boxes and
 sample counts to finish in CI time, with flags to run the full study.
+
+The expression specs (:data:`MATRIX_CHAIN_ABCD`, :data:`GRAM_AATB`),
+:class:`Instance` and :func:`measure_instance` live in
+:mod:`repro.core.sweep` and are re-exported here for backwards
+compatibility.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time as _time
+import os
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .algorithms import Algorithm, enumerate_algorithms
 from .anomaly import Classification, ConfusionMatrix, RegionScan, classify, scan_line
-from .expr import Chain, gram_times, matrix_chain
 from .perfmodel import TableProfile, predict_algorithm_time
 from .runners import BlasRunner
+from .sweep import (
+    GRAM_AATB,
+    MATRIX_CHAIN_ABCD,
+    AnomalyAtlas,
+    ExpressionSpec,
+    Instance,
+    benchmark_unique_calls,
+    collect_unique_calls,
+    measure_instance,
+    sweep,
+)
 
-
-@dataclasses.dataclass(frozen=True)
-class ExpressionSpec:
-    """A family of instances: tuple of dims -> Chain."""
-
-    name: str
-    ndims: int
-    build: Callable[[Sequence[int]], Chain]
-
-    def algorithms(self, point: Sequence[int]) -> List[Algorithm]:
-        return enumerate_algorithms(self.build(tuple(int(x) for x in point)))
-
-
-MATRIX_CHAIN_ABCD = ExpressionSpec(
-    name="ABCD", ndims=5, build=lambda d: matrix_chain(*d))
-
-GRAM_AATB = ExpressionSpec(
-    name="AATB", ndims=3, build=lambda d: gram_times(*d))
-
-
-@dataclasses.dataclass
-class Instance:
-    point: Tuple[int, ...]
-    times: Dict[str, float]
-    flops: Dict[str, int]
-    cls: Classification
-
-
-def measure_instance(
-    spec: ExpressionSpec,
-    point: Sequence[int],
-    runner: BlasRunner,
-    threshold: float = 0.10,
-) -> Instance:
-    """Time every algorithm for one instance and classify it."""
-    algos = spec.algorithms(point)
-    times: Dict[str, float] = {}
-    flops: Dict[str, int] = {}
-    operands = runner.make_operands(algos[-1])  # leaves shared across algos
-    for a in algos:
-        # ensure operand dict covers this algorithm's leaves too
-        for k, v in runner.make_operands(a).items():
-            operands.setdefault(k, v)
-        times[a.name] = runner.time_algorithm(a, operands)
-        flops[a.name] = a.flops
-    cls = classify(times, flops, threshold=threshold)
-    return Instance(tuple(int(x) for x in point), times, flops, cls)
+__all__ = [
+    "ExpressionSpec", "Instance", "measure_instance",
+    "MATRIX_CHAIN_ABCD", "GRAM_AATB",
+    "Experiment1Result", "Experiment2Result", "Experiment3Result",
+    "experiment1_random_search", "experiment2_regions",
+    "experiment3_predict_from_benchmarks",
+]
 
 
 @dataclasses.dataclass
@@ -92,32 +71,69 @@ class Experiment1Result:
 
 def experiment1_random_search(
     spec: ExpressionSpec,
-    runner: BlasRunner,
+    runner: Optional[BlasRunner] = None,
     box: Tuple[int, int] = (20, 1200),
     n_anomalies: int = 20,
     max_samples: int = 2000,
     threshold: float = 0.10,
     seed: int = 0,
     verbose: bool = False,
+    atlas: Optional[AnomalyAtlas] = None,
+    backend: str = "serial",
+    shards: Optional[int] = None,
+    runner_factory: Optional[Callable[[], object]] = None,
+    batch: int = 25,
 ) -> Experiment1Result:
-    """Paper §3.4.1: sample instances u.a.r. until n anomalies are found."""
+    """Paper §3.4.1: sample instances u.a.r. until n anomalies are found.
+
+    Sampling proceeds in batches of ``batch`` points so the engine can
+    shard each batch across workers; the search stops at the end of the
+    batch that reaches ``n_anomalies`` (it may slightly overshoot). Points
+    already in ``atlas`` count as samples but are served from disk. With
+    ``backend="process"`` one worker pool serves the entire search;
+    ``runner`` configures only the serial backend — sharded backends build
+    their workers from ``runner_factory``.
+    """
     rng = np.random.default_rng(seed)
+    if runner is not None and backend != "serial":
+        # same guard sweep() enforces: a runner's protocol (reps, cache
+        # flushing) must not be silently swapped for worker defaults
+        raise ValueError(
+            f"runner= only configures the serial backend; backend="
+            f"{backend!r} builds workers from runner_factory")
+    if runner is None and runner_factory is None and backend == "serial":
+        runner = BlasRunner()  # one flush buffer for the whole search
+    executor = None
+    if backend == "process":
+        from concurrent.futures import ProcessPoolExecutor
+        executor = ProcessPoolExecutor(
+            max_workers=shards or os.cpu_count() or 1)
     found: List[Instance] = []
-    t0 = _time.perf_counter()
     samples = 0
-    while len(found) < n_anomalies and samples < max_samples:
-        point = tuple(int(x) for x in
-                      rng.integers(box[0], box[1] + 1, size=spec.ndims))
-        inst = measure_instance(spec, point, runner, threshold)
-        samples += 1
-        if inst.cls.is_anomaly:
-            found.append(inst)
-            if verbose:
-                print(f"  anomaly #{len(found)} at {point} "
-                      f"ts={inst.cls.time_score:.1%} "
-                      f"fs={inst.cls.flop_score:.1%}")
-    return Experiment1Result(spec.name, samples, found,
-                             _time.perf_counter() - t0)
+    wall = 0.0
+    try:
+        while len(found) < n_anomalies and samples < max_samples:
+            n = min(batch, max_samples - samples)
+            pts = [tuple(int(x) for x in
+                         rng.integers(box[0], box[1] + 1, size=spec.ndims))
+                   for _ in range(n)]
+            res = sweep(spec, pts, runner=runner,
+                        runner_factory=runner_factory, threshold=threshold,
+                        backend=backend, shards=shards, atlas=atlas,
+                        executor=executor)
+            samples += res.n_points
+            wall += res.wall_s
+            for inst in res.records:
+                if inst.cls.is_anomaly:
+                    found.append(inst)
+                    if verbose:
+                        print(f"  anomaly #{len(found)} at {inst.point} "
+                              f"ts={inst.cls.time_score:.1%} "
+                              f"fs={inst.cls.flop_score:.1%}")
+    finally:
+        if executor is not None:
+            executor.shutdown()
+    return Experiment1Result(spec.name, samples, found, wall)
 
 
 @dataclasses.dataclass
@@ -130,29 +146,45 @@ class Experiment2Result:
 
 def experiment2_regions(
     spec: ExpressionSpec,
-    runner: BlasRunner,
-    anomalies: Sequence[Instance],
+    runner: Optional[BlasRunner] = None,
+    anomalies: Sequence[Instance] = (),
     box: Tuple[int, int] = (20, 1200),
     step: int = 10,
     threshold: float = 0.05,
+    atlas: Optional[AnomalyAtlas] = None,
 ) -> Experiment2Result:
-    """Paper §3.4.2: intersect regions with axis-aligned lines."""
+    """Paper §3.4.2: intersect regions with axis-aligned lines.
+
+    Line traversal is inherently sequential (each probe decides the next),
+    so this harness probes point by point with the engine's measurement
+    primitive; with an ``atlas`` every probe is served from / buffered
+    into it (chunk-flushed by the atlas, once more on return), so repeat
+    traversals resume.
+    """
+    if runner is None:
+        runner = BlasRunner()  # one flush buffer for every probe
     classified: Dict[Tuple[int, ...], Instance] = {}
 
-    def classify_at_factory(origin: Tuple[int, ...], dim: int):
-        def classify_at(point: Tuple[int, ...]) -> Classification:
-            if point not in classified:
-                classified[point] = measure_instance(
-                    spec, point, runner, threshold)
-            return classified[point].cls
-        return classify_at
+    def classify_at(point: Tuple[int, ...]) -> Classification:
+        if point not in classified:
+            hit = atlas.get(point) if atlas is not None else None
+            if hit is None:
+                hit = measure_instance(spec, point, runner, threshold)
+                if atlas is not None:
+                    atlas.append(hit)  # buffered: fsync per chunk, not probe
+            classified[point] = hit
+        return classified[point].cls
 
     scans: List[RegionScan] = []
-    for inst in anomalies:
-        for dim in range(spec.ndims):
-            scans.append(scan_line(
-                classify_at_factory(inst.point, dim),
-                inst.point, dim, box[0], box[1], step=step))
+    try:
+        for inst in anomalies:
+            for dim in range(spec.ndims):
+                scans.append(scan_line(
+                    classify_at, inst.point, dim, box[0], box[1],
+                    step=step))
+    finally:
+        if atlas is not None:
+            atlas.flush()
     return Experiment2Result(spec.name, scans, classified)
 
 
@@ -161,6 +193,8 @@ class Experiment3Result:
     spec_name: str
     confusion: ConfusionMatrix
     profile: TableProfile
+    n_calls_measured: int = 0
+    n_calls_reused: int = 0
 
 
 def experiment3_predict_from_benchmarks(
@@ -175,19 +209,21 @@ def experiment3_predict_from_benchmarks(
     predict each instance's fastest/cheapest sets from the additive model and
     compare against measured ground truth.
 
-    Pass a persisted ``profile`` (see :mod:`repro.core.profile_store`) to
-    reuse prior calibrations: only calls it lacks are measured, and the
-    entries added here flow back to the caller through the result."""
+    The distinct-call set is collected across *all* instances up front and
+    deduplicated (:func:`~repro.core.sweep.benchmark_unique_calls`), so
+    each (kind, dims) is timed at most once per machine. Pass a persisted
+    ``profile`` (see :mod:`repro.core.profile_store`) to reuse prior
+    calibrations: only calls it lacks are measured, and the entries added
+    here flow back to the caller through the result.
+    """
     if profile is None:
         profile = TableProfile(peak_flops=peak_flops)
     cm = ConfusionMatrix()
 
-    # 1. Collect + benchmark every distinct call across all instances.
-    for point in classified:
-        for a in spec.algorithms(point):
-            for call in a.calls:
-                if call not in profile:
-                    profile.record(call, runner.benchmark_call(call))
+    # 1. Benchmark the deduplicated call set (batched; reuses the cache).
+    calls = collect_unique_calls(spec, classified)
+    profile, n_meas, n_reused = benchmark_unique_calls(
+        runner, calls, profile=profile)
 
     # 2. Predict per instance; compare with measured classification.
     for point, inst in classified.items():
@@ -199,4 +235,6 @@ def experiment3_predict_from_benchmarks(
         actual = classify(inst.times, flops, threshold=threshold)
         cm.add(actual.is_anomaly, predicted.is_anomaly)
 
-    return Experiment3Result(spec.name, cm, profile)
+    return Experiment3Result(spec.name, cm, profile,
+                             n_calls_measured=n_meas,
+                             n_calls_reused=n_reused)

@@ -151,6 +151,16 @@ class TableProfile(KernelProfile):
     def peak(self) -> float:
         return self._peak
 
+    def observe_peak(self, flops_per_s: float) -> None:
+        """Raise the recorded peak when a faster throughput is observed.
+
+        Keeps :meth:`efficiency` (the paper's Fig. 1 quantity) meaningful
+        as later sweeps measure kernels faster than the original
+        calibration's best — without this, efficiency clamps at 1.0.
+        """
+        if flops_per_s > self._peak:
+            self._peak = float(flops_per_s)
+
     def record(self, call: KernelCall, seconds: float) -> None:
         # Copy-on-write under a writer lock: readers (time/nearest iterate
         # the dict) hold the old mapping while recorders rebind — so the
@@ -260,6 +270,9 @@ class HybridProfile(KernelProfile):
 
     def record(self, call: KernelCall, seconds: float) -> None:
         self.table_profile.record(call, seconds)
+
+    def observe_peak(self, flops_per_s: float) -> None:
+        self.table_profile.observe_peak(flops_per_s)
 
 
 def predict_algorithm_time(

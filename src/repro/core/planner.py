@@ -79,7 +79,22 @@ def resolve_profile(
 
 
 class Planner:
-    """Thread-safe, memoising planner with optional online refinement."""
+    """Thread-safe, memoising planner with optional online refinement.
+
+    ``record=True`` semantics (post-calibration-subsystem behaviour): every
+    ``planner(chain, *arrays)`` execution is wall-timed with a block on JAX
+    async dispatch, the observed seconds are apportioned over the plan's
+    kernel calls in proportion to the *analytical* model's relative call
+    costs (one consistent weight model — see :meth:`observe`), and each
+    share is EMA-blended (``observation_blend``, default 0.25) into the
+    live table profile. Refinement needs a table to write into: a pure
+    analytical profile makes ``observe`` a silent no-op. ``planner.save()``
+    persists the refined table under this planner's
+    ``(profile_backend, profile_dtype)`` fingerprint — by default
+    ``jax/float32`` when recording, so online JAX timings are never filed
+    under the ``blas/float64`` calibration that Experiment 3 trusts as
+    isolated BLAS benchmarks.
+    """
 
     def __init__(
         self,

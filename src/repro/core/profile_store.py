@@ -92,13 +92,24 @@ def current_fingerprint(backend: str = "blas",
     return HardwareFingerprint(backend=backend, device=device, dtype=dtype)
 
 
+def cache_base_dir() -> Path:
+    """Root of this package's on-disk caches (``…/repro``).
+
+    Shared by the profile cache (``<base>/profiles``) and the sweep
+    engine's anomaly atlas (``<base>/atlas`` — see
+    :mod:`repro.core.sweep`), so every per-machine artifact lives under
+    one directory keyed by the same hardware fingerprints.
+    """
+    xdg = os.environ.get("XDG_CACHE_HOME")
+    base = Path(xdg) if xdg else Path.home() / ".cache"
+    return base / "repro"
+
+
 def cache_dir() -> Path:
     env = os.environ.get(_ENV_DIR)
     if env:
         return Path(env)
-    xdg = os.environ.get("XDG_CACHE_HOME")
-    base = Path(xdg) if xdg else Path.home() / ".cache"
-    return base / "repro" / "profiles"
+    return cache_base_dir() / "profiles"
 
 
 def profile_path(fingerprint: HardwareFingerprint,

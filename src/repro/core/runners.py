@@ -195,10 +195,21 @@ class JaxRunner:
     ``use_pallas=True`` routes gemm/syrk/symm through the Pallas TPU kernels
     (interpret mode on CPU); otherwise pure jnp — the two must agree, which
     tests/test_kernels.py asserts.
+
+    ``device`` pins every operand this runner synthesizes (and therefore
+    the computation, which follows its inputs) to one JAX device — the
+    sweep engine constructs one runner per device to shard a grid across
+    all of them. ``None`` leaves placement to JAX's default.
     """
 
-    def __init__(self, use_pallas: bool = False):
+    def __init__(self, use_pallas: bool = False, device=None,
+                 reps: int = 3, dtype: str = "float32",
+                 rng: Optional[np.random.Generator] = None):
         self.use_pallas = use_pallas
+        self.device = device
+        self.reps = reps
+        self.dtype = dtype
+        self.rng = rng or np.random.default_rng(0)
 
     def build(self, alg: Algorithm) -> Callable:
         import jax.numpy as jnp
@@ -252,6 +263,56 @@ class JaxRunner:
                 if isinstance(ref, Leaf):
                     mx = max(mx, ref.index)
         return mx + 1
+
+    # -- measure interface (mirrors BlasRunner) ----------------------------
+    def make_operands(self, alg: Algorithm) -> Dict[int, object]:
+        """Device-resident random inputs keyed by leaf *base* index.
+
+        Same contract as :meth:`BlasRunner.make_operands`, so
+        ``measure_instance``/the sweep engine treat both runners uniformly.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        ops: Dict[int, object] = {}
+        for step in alg.steps:
+            for ref in (step.lhs, step.rhs):
+                if isinstance(ref, Leaf) and ref.base not in ops:
+                    r, c = (ref.cols, ref.rows) if ref.transposed else (
+                        ref.rows, ref.cols)
+                    a = jnp.asarray(self.rng.standard_normal((r, c)),
+                                    dtype=self.dtype)
+                    if self.device is not None:
+                        a = jax.device_put(a, self.device)
+                    ops[ref.base] = a
+        return ops
+
+    def time_algorithm(self, alg: Algorithm,
+                       operands: Optional[Dict[int, object]] = None
+                       ) -> float:
+        """Median-of-reps wall seconds, jitted and blocked on completion.
+
+        Compile time is excluded by the warm-up call; blocking defeats
+        async dispatch under-reporting. There is no cache flush here — on
+        the JAX backend operands live in HBM and the measured quantity is
+        steady-state device time, not the paper's cold-cache CPU protocol.
+        """
+        import jax
+
+        if operands is None:
+            operands = self.make_operands(alg)
+        n = self.num_inputs(alg)
+        some = next(iter(operands.values()))
+        # fetch only ever reads base positions; fill the rest with any array
+        args = [operands.get(i, some) for i in range(n)]
+        fn = jax.jit(self.build(alg))
+        jax.block_until_ready(fn(*args))  # warm-up: compile + page-in
+        ts: List[float] = []
+        for _ in range(self.reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
 
     # -- calibration: isolated kernel benchmarks --------------------------
     def benchmark_call(self, call: KernelCall, reps: int = 5,

@@ -33,6 +33,7 @@ DISCRIMINANTS = ("flops", "perfmodel", "hybrid", "measured")
 
 
 def rank_by_flops(algos: Sequence[Algorithm]) -> List[Algorithm]:
+    """Ascending FLOP count, ties broken by name (deterministic)."""
     return sorted(algos, key=lambda a: (a.flops, a.name))
 
 
@@ -41,6 +42,16 @@ def rank_by_perfmodel(
     profile: Optional[KernelProfile] = None,
     dtype_bytes: int = 2,
 ) -> List[Algorithm]:
+    """Ascending predicted time under the additive per-kernel model.
+
+    ``profile`` is used *as given* (no hybrid coercion — contrast
+    :func:`rank_by_hybrid`); ``None`` falls back to the closed-form
+    :class:`~repro.core.perfmodel.AnalyticalTPUProfile`. A bare
+    :class:`~repro.core.perfmodel.TableProfile` may therefore raise
+    ``KeyError`` on kernel kinds it has never seen — pass it through the
+    ``hybrid`` discriminant if the calibration may be partial. FLOPs and
+    name break prediction ties, keeping rankings deterministic.
+    """
     prof = profile or AnalyticalTPUProfile()
     return sorted(
         algos,
@@ -93,6 +104,23 @@ def select(
     runner: Optional[BlasRunner] = None,
     dtype_bytes: int = 2,
 ) -> List[Algorithm]:
+    """Rank ``algos`` best-first under the chosen discriminant.
+
+    How the optional ``profile`` is interpreted depends on the
+    discriminant:
+
+    * ``flops``     — ignored (pure FLOP count).
+    * ``perfmodel`` — used verbatim; ``None`` means the analytical model.
+    * ``hybrid``    — coerced through :func:`as_hybrid` (measured table
+      entries where a calibration has them — exactly or by near
+      nearest-neighbour — analytical fallback elsewhere), so partial
+      calibrations still rank every candidate.
+    * ``measured``  — ignored; ``runner`` (default: a fresh
+      :class:`~repro.core.runners.BlasRunner`) times each algorithm.
+
+    This is the single entry point the planner uses; it takes rank 0 of
+    the returned list.
+    """
     if discriminant == "flops":
         return rank_by_flops(algos)
     if discriminant == "perfmodel":

@@ -1,0 +1,928 @@
+"""Sharded grid sweeps over problem-size space + the persistent anomaly atlas.
+
+The paper's central empirical finding is that anomalies — instances where the
+FLOP-cheapest algorithm is not the fastest — "cluster into large contiguous
+regions" of the problem-size space (§3.4.2). Mapping those regions needs
+*dense* sweeps over size grids (the methodology of Peise & Bientinesi's
+performance-modeling line, arXiv:1209.2364 / arXiv:1409.8602), which a serial
+Python loop cannot deliver at useful resolution. This module is the scaling
+layer:
+
+* :class:`GridSpec` / :data:`SWEEP_GRIDS` — named dim grids over an
+  expression family (``ABCD``, ``AAᵀB``, or any custom
+  :class:`ExpressionSpec`).
+* :func:`sweep` — the one measurement path. Shards the grid across workers:
+  a process pool for the BLAS runner (kernel timing is GIL-bound and
+  cache-sensitive, so isolation per process matches the paper's protocol),
+  or one :class:`~repro.core.runners.JaxRunner` per JAX device (operands are
+  device-pinned; devices measure their shards concurrently). Results stream
+  into the atlas in chunks, so a killed sweep resumes from the last chunk.
+* :class:`AnomalyAtlas` — persistent, resumable, versioned JSONL store of
+  per-instance :class:`~repro.core.anomaly.Classification` results, one file
+  per (expression, threshold, hardware fingerprint) — the same fingerprint
+  scheme as :mod:`repro.core.profile_store`, so atlases calibrated on one
+  machine are never silently mixed with another's.
+* :func:`benchmark_unique_calls` / :func:`predict_classifications` — the
+  batched kernel path: across a grid, algorithms share most of their kernel
+  calls, so deduplicating (kind, dims) before benchmarking amortizes
+  dispatch by orders of magnitude and feeds the calibration cache.
+* :func:`cluster_sweep` — connected-component pass over a swept grid,
+  reproducing the paper's contiguous-region claim with per-region severity
+  summaries.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.core.sweep --expr aatb --grid small
+    PYTHONPATH=src python -m repro.core.sweep --expr aatb --grid small  # resumes: measured=0
+    PYTHONPATH=src python -m repro.core.sweep --expr abcd --grid default --shards 8
+    PYTHONPATH=src python -m repro.core.sweep --expr aatb --grid small --mode predict
+
+The paper harnesses (:mod:`repro.core.experiments`) and the experiment
+benchmarks are thin configurations over this engine.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import itertools
+import json
+import os
+import re
+import sys
+import time as _time
+from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, ThreadPoolExecutor, wait
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+from .algorithms import Algorithm, Leaf, enumerate_algorithms
+from .anomaly import Classification, Region, classify, cluster_regions, region_summary
+from .expr import Chain, gram_times, matrix_chain
+from .flops import KernelCall
+from .perfmodel import KernelProfile, TableProfile, predict_algorithm_time
+from .profile_store import (
+    HardwareFingerprint,
+    cache_base_dir,
+    current_fingerprint,
+    load_default_profile,
+    save_profile,
+)
+from .runners import BlasRunner, JaxRunner
+
+# ------------------------------------------------------- expression specs ---
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpressionSpec:
+    """A family of instances: tuple of dims -> Chain.
+
+    ``build`` must be a module-level function (not a lambda/closure) so
+    specs pickle across the process-pool backend.
+    """
+
+    name: str
+    ndims: int
+    build: Callable[[Sequence[int]], Chain]
+
+    def algorithms(self, point: Sequence[int]) -> List[Algorithm]:
+        return enumerate_algorithms(self.build(tuple(int(x) for x in point)))
+
+
+def _build_abcd(dims: Sequence[int]) -> Chain:
+    return matrix_chain(*dims)
+
+
+def _build_aatb(dims: Sequence[int]) -> Chain:
+    return gram_times(*dims)
+
+
+MATRIX_CHAIN_ABCD = ExpressionSpec(name="ABCD", ndims=5, build=_build_abcd)
+
+GRAM_AATB = ExpressionSpec(name="AATB", ndims=3, build=_build_aatb)
+
+#: CLI-name -> spec. Custom specs can be registered here by embedding code.
+SPECS: Dict[str, ExpressionSpec] = {
+    "abcd": MATRIX_CHAIN_ABCD,
+    "aatb": GRAM_AATB,
+}
+
+
+# --------------------------------------------------- instance measurement ---
+
+
+def _leaf_bases(alg: Algorithm) -> set:
+    """Distinct operand base indices an algorithm's steps reference."""
+    return {ref.base for step in alg.steps for ref in (step.lhs, step.rhs)
+            if isinstance(ref, Leaf)}
+
+
+@dataclasses.dataclass
+class Instance:
+    """One fully measured grid point: per-algorithm times/FLOPs + verdict."""
+
+    point: Tuple[int, ...]
+    times: Dict[str, float]
+    flops: Dict[str, int]
+    cls: Classification
+
+
+def measure_instance(
+    spec: ExpressionSpec,
+    point: Sequence[int],
+    runner,
+    threshold: float = 0.10,
+) -> Instance:
+    """Time every algorithm for one instance and classify it.
+
+    ``runner`` is any object with ``make_operands(alg) -> dict`` and
+    ``time_algorithm(alg, operands) -> seconds`` —
+    :class:`~repro.core.runners.BlasRunner` and
+    :class:`~repro.core.runners.JaxRunner` both qualify.
+    """
+    algos = spec.algorithms(point)
+    times: Dict[str, float] = {}
+    flops: Dict[str, int] = {}
+    # Leaves are shared across algorithms: synthesize operands once, and
+    # only fall back to make_operands for an algorithm referencing a base
+    # the dict lacks — not per algorithm, which would generate (and mostly
+    # discard) a full operand set each time.
+    operands = runner.make_operands(algos[-1])
+    for a in algos:
+        if not _leaf_bases(a) <= operands.keys():
+            for k, v in runner.make_operands(a).items():
+                operands.setdefault(k, v)
+        times[a.name] = runner.time_algorithm(a, operands)
+        flops[a.name] = a.flops
+    cls = classify(times, flops, threshold=threshold)
+    return Instance(tuple(int(x) for x in point), times, flops, cls)
+
+
+# ------------------------------------------------------------------ grids ---
+
+#: Named per-axis dim values; every axis of a grid uses the same values, so
+#: an n-dim spec swept at grid g covers len(g)**n instances.
+SWEEP_GRIDS: Dict[str, Tuple[int, ...]] = {
+    "smoke": (32, 64),
+    "small": (32, 64, 96, 128),
+    "default": tuple(range(64, 513, 64)),
+    "full": tuple(range(100, 1201, 100)),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class GridSpec:
+    """A rectilinear grid of instances: one sorted value axis per dim."""
+
+    name: str
+    axes: Tuple[Tuple[int, ...], ...]
+
+    def __post_init__(self):
+        for ax in self.axes:
+            if list(ax) != sorted(set(int(v) for v in ax)):
+                raise ValueError(f"grid axis must be sorted unique ints: {ax}")
+
+    @classmethod
+    def uniform(cls, values: Iterable[int], ndims: int,
+                name: str = "custom") -> "GridSpec":
+        vals = tuple(sorted(set(int(v) for v in values)))
+        return cls(name=name, axes=(vals,) * ndims)
+
+    @classmethod
+    def named(cls, name: str, ndims: int) -> "GridSpec":
+        if name not in SWEEP_GRIDS:
+            raise ValueError(
+                f"unknown grid {name!r}; expected {sorted(SWEEP_GRIDS)}")
+        return cls.uniform(SWEEP_GRIDS[name], ndims, name=name)
+
+    @property
+    def n_points(self) -> int:
+        out = 1
+        for ax in self.axes:
+            out *= len(ax)
+        return out
+
+    def points(self) -> List[Tuple[int, ...]]:
+        """All grid points in deterministic row-major order."""
+        return [tuple(p) for p in itertools.product(*self.axes)]
+
+
+# ------------------------------------------------------------------ atlas ---
+
+ATLAS_SCHEMA_VERSION = 1
+
+_ENV_ATLAS_DIR = "REPRO_ATLAS_DIR"
+
+
+class AtlasError(RuntimeError):
+    """Atlas file exists but belongs to a different sweep configuration."""
+
+
+def atlas_dir() -> Path:
+    env = os.environ.get(_ENV_ATLAS_DIR)
+    if env:
+        return Path(env)
+    return cache_base_dir() / "atlas"
+
+
+def _slug(s: str) -> str:
+    return re.sub(r"[^A-Za-z0-9._-]+", "_", s).lower()
+
+
+def atlas_path(spec_name: str, fingerprint: HardwareFingerprint,
+               threshold: float, directory: Optional[Path] = None) -> Path:
+    d = Path(directory) if directory is not None else atlas_dir()
+    t = f"{threshold:g}".replace(".", "p")
+    return d / f"atlas-{_slug(spec_name)}-t{t}-{fingerprint.slug()}.jsonl"
+
+
+def _instance_to_json(inst: Instance) -> dict:
+    return {
+        "point": list(inst.point),
+        "is_anomaly": inst.cls.is_anomaly,
+        "time_score": inst.cls.time_score,
+        "flop_score": inst.cls.flop_score,
+        "cheapest": list(inst.cls.cheapest),
+        "fastest": list(inst.cls.fastest),
+        "times": inst.times,
+        "flops": inst.flops,
+    }
+
+
+def _instance_from_json(d: dict) -> Instance:
+    cls = Classification(
+        is_anomaly=bool(d["is_anomaly"]),
+        time_score=float(d["time_score"]),
+        flop_score=float(d["flop_score"]),
+        cheapest=tuple(d["cheapest"]),
+        fastest=tuple(d["fastest"]),
+    )
+    return Instance(
+        point=tuple(int(x) for x in d["point"]),
+        times={str(k): float(v) for k, v in d["times"].items()},
+        flops={str(k): int(v) for k, v in d["flops"].items()},
+        cls=cls,
+    )
+
+
+class AnomalyAtlas:
+    """Persistent, resumable JSONL store of swept classifications.
+
+    One file per (expression, anomaly threshold, hardware fingerprint).
+    Line 1 is a header record ``{"kind": "header", ...}``; every other line
+    is one instance. Appends are buffered and flushed in chunks of
+    ``chunk_size`` (with fsync), so a killed sweep loses at most one
+    unflushed chunk and a restart resumes from the last chunk: points
+    already on disk are skipped by :func:`sweep`.
+
+    A torn final line (the kill landed mid-write) is tolerated on load;
+    any undecodable line is skipped and counted in ``skipped_lines``.
+    """
+
+    def __init__(self, path: Path, fingerprint: HardwareFingerprint,
+                 spec_name: str, threshold: float, chunk_size: int = 32):
+        if chunk_size < 1:
+            raise ValueError("chunk_size must be >= 1")
+        self.path = Path(path)
+        self.fingerprint = fingerprint
+        self.spec_name = spec_name
+        self.threshold = float(threshold)
+        self.chunk_size = chunk_size
+        self.skipped_lines = 0
+        self._records: Dict[Tuple[int, ...], Instance] = {}
+        self._buffer: List[str] = []
+        self._header_on_disk = False
+        self.recovered_from: Optional[Path] = None
+        if self.path.is_file():
+            self._load()
+
+    @classmethod
+    def open(cls, spec_name: str, fingerprint: HardwareFingerprint,
+             threshold: float = 0.10, directory: Optional[Path] = None,
+             chunk_size: int = 32) -> "AnomalyAtlas":
+        """Open (resuming) or create the atlas for this configuration."""
+        path = atlas_path(spec_name, fingerprint, threshold, directory)
+        return cls(path, fingerprint, spec_name, threshold,
+                   chunk_size=chunk_size)
+
+    # -- persistence ------------------------------------------------------
+    def _header(self) -> dict:
+        return {
+            "kind": "header",
+            "version": ATLAS_SCHEMA_VERSION,
+            "spec": self.spec_name,
+            "threshold": self.threshold,
+            "fingerprint": self.fingerprint.to_dict(),
+        }
+
+    def _load(self) -> None:
+        with self.path.open() as f:
+            first = f.readline()
+            try:
+                head = json.loads(first)
+            except json.JSONDecodeError:
+                # The kill landed mid-write of the header itself (it is the
+                # first line of the first flushed chunk, so at most one
+                # chunk existed). Resume must survive this: preserve the
+                # torn file as a sidecar and start the atlas fresh.
+                side = self.path.with_suffix(self.path.suffix + ".corrupt")
+                self.path.replace(side)
+                self.recovered_from = side
+                return
+            if head.get("kind") != "header":
+                raise AtlasError(f"atlas {self.path} is missing its header")
+            if head.get("version") != ATLAS_SCHEMA_VERSION:
+                raise AtlasError(
+                    f"atlas {self.path} has schema version "
+                    f"{head.get('version')!r}; this build reads "
+                    f"{ATLAS_SCHEMA_VERSION}")
+            fp = HardwareFingerprint.from_dict(head["fingerprint"])
+            if fp != self.fingerprint:
+                raise AtlasError(
+                    f"atlas {self.path} was swept on {fp}, but this "
+                    f"process targets {self.fingerprint}")
+            if head.get("spec") != self.spec_name or \
+                    abs(head.get("threshold", -1) - self.threshold) > 1e-12:
+                raise AtlasError(
+                    f"atlas {self.path} records spec="
+                    f"{head.get('spec')!r}/threshold="
+                    f"{head.get('threshold')!r}, not "
+                    f"{self.spec_name!r}/{self.threshold}")
+            self._header_on_disk = True
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    inst = _instance_from_json(json.loads(line))
+                except (json.JSONDecodeError, KeyError, TypeError, ValueError):
+                    # Torn tail from a killed writer (or a corrupt line):
+                    # drop it; the sweep will re-measure that point.
+                    self.skipped_lines += 1
+                    continue
+                self._records[inst.point] = inst
+
+    def append(self, inst: Instance) -> bool:
+        """Add one instance; returns False (no write) for known points."""
+        if inst.point in self._records:
+            return False
+        self._records[inst.point] = inst
+        self._buffer.append(json.dumps(_instance_to_json(inst),
+                                       sort_keys=True))
+        if len(self._buffer) >= self.chunk_size:
+            self.flush()
+        return True
+
+    def flush(self) -> None:
+        """Durably write buffered records (chunk boundary for resume)."""
+        if not self._buffer and self._header_on_disk:
+            return
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        with self.path.open("a") as f:
+            if not self._header_on_disk:
+                f.write(json.dumps(self._header(), sort_keys=True) + "\n")
+                self._header_on_disk = True
+            for line in self._buffer:
+                f.write(line + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        self._buffer.clear()
+
+    def __enter__(self) -> "AnomalyAtlas":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.flush()
+
+    # -- queries ----------------------------------------------------------
+    def __contains__(self, point: Sequence[int]) -> bool:
+        return tuple(int(x) for x in point) in self._records
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def get(self, point: Sequence[int]) -> Optional[Instance]:
+        return self._records.get(tuple(int(x) for x in point))
+
+    def records(self) -> List[Instance]:
+        return list(self._records.values())
+
+    def anomalies(self) -> List[Instance]:
+        return [r for r in self._records.values() if r.cls.is_anomaly]
+
+
+# ---------------------------------------------------------------- backends --
+
+
+def _factory_key(factory) -> object:
+    """Identity of a runner factory that survives pickling.
+
+    ``functools.partial`` compares by object identity, and every chunk
+    shipped to a worker unpickles to a *new* partial — so the worker-local
+    runner cache keys on (func, args, kwargs) instead.
+    """
+    if isinstance(factory, functools.partial):
+        return (factory.func, factory.args,
+                tuple(sorted(factory.keywords.items())))
+    return factory
+
+
+_worker_runner: Optional[Tuple[object, object]] = None  # (key, runner)
+
+
+def _measure_chunk(spec: ExpressionSpec, points: Sequence[Tuple[int, ...]],
+                   runner_factory: Callable[[], object],
+                   threshold: float) -> List[Instance]:
+    """Process-pool worker: measure one shard of points.
+
+    Module-level (picklable); each worker builds its own runner — BLAS
+    state, RNGs and cache-flush buffers are never shared across processes
+    — and caches it for the worker's lifetime, so the 64 MB flush buffer
+    is zeroed once per worker rather than once per chunk.
+    """
+    global _worker_runner
+    key = _factory_key(runner_factory)
+    if _worker_runner is None or _worker_runner[0] != key:
+        _worker_runner = (key, runner_factory())
+    runner = _worker_runner[1]
+    return [measure_instance(spec, p, runner, threshold) for p in points]
+
+
+def _chunked(seq: Sequence, size: int) -> List[Sequence]:
+    return [seq[i:i + size] for i in range(0, len(seq), size)]
+
+
+def _run_serial(spec, points, runner, threshold, on_done) -> None:
+    for p in points:
+        on_done(measure_instance(spec, p, runner, threshold))
+
+
+def _run_process_pool(spec, points, runner_factory, threshold, shards,
+                      chunk_size, on_done, executor=None) -> None:
+    """Shard points over a process pool (the BLAS fallback path).
+
+    Chunks are submitted eagerly but results are drained as they complete,
+    so the atlas keeps filling (and flushing) while workers run — a kill
+    mid-pool still leaves every completed chunk on disk. An ``executor``
+    passed in is reused and left open (callers measuring many point sets,
+    e.g. Experiment 1's sampling loop, pay process start-up once).
+    """
+    chunks = _chunked(points, chunk_size)
+    own = executor is None
+    pool = executor if executor is not None else ProcessPoolExecutor(
+        max_workers=shards)
+    try:
+        pending = {
+            pool.submit(_measure_chunk, spec, c, runner_factory, threshold)
+            for c in chunks
+        }
+        while pending:
+            done, pending = wait(pending, return_when=FIRST_COMPLETED)
+            for fut in done:
+                for inst in fut.result():
+                    on_done(inst)
+    finally:
+        if own:
+            pool.shutdown()
+
+
+def _run_jax_devices(spec, points, threshold, reps, use_pallas, dtype,
+                     shards, on_done) -> None:
+    """Shard points across JAX devices, one pinned runner per device.
+
+    Each device gets a round-robin shard and its own
+    :class:`~repro.core.runners.JaxRunner` whose operands are
+    ``device_put`` to it; device shards run concurrently on threads (jit
+    dispatch releases the GIL while devices execute). On a 1-device host
+    this degrades to the serial path. Results stream to ``on_done`` per
+    instance (serialized by a lock), so the atlas keeps flushing and a
+    killed sweep still resumes from the last chunk.
+    """
+    import threading
+
+    import jax
+
+    devices = jax.devices()
+    if shards:
+        devices = devices[:shards]
+    runners = [JaxRunner(use_pallas=use_pallas, device=d, reps=reps,
+                         dtype=dtype) for d in devices]
+    shards_pts = [points[i::len(devices)] for i in range(len(devices))]
+    lock = threading.Lock()
+
+    def work(runner, pts):
+        for p in pts:
+            inst = measure_instance(spec, p, runner, threshold)
+            with lock:
+                on_done(inst)
+
+    with ThreadPoolExecutor(max_workers=len(devices)) as pool:
+        futs = [pool.submit(work, r, pts)
+                for r, pts in zip(runners, shards_pts) if pts]
+        for fut in futs:
+            fut.result()  # surface worker exceptions
+
+
+# ------------------------------------------------------------------ sweep ---
+
+
+@dataclasses.dataclass
+class SweepResult:
+    spec_name: str
+    records: List[Instance]   # one per requested point (measured or cached)
+    n_measured: int
+    n_skipped: int            # points served from the atlas
+    wall_s: float
+    atlas_path: Optional[Path] = None
+
+    @property
+    def n_points(self) -> int:
+        return len(self.records)
+
+    @property
+    def anomalies(self) -> List[Instance]:
+        return [r for r in self.records if r.cls.is_anomaly]
+
+    @property
+    def anomaly_rate(self) -> float:
+        return len(self.anomalies) / len(self.records) if self.records \
+            else 0.0
+
+    @property
+    def instances_per_s(self) -> float:
+        return self.n_measured / self.wall_s if self.wall_s > 0 else 0.0
+
+
+def sweep(
+    spec: ExpressionSpec,
+    points: Sequence[Sequence[int]],
+    *,
+    runner=None,
+    runner_factory: Optional[Callable[[], object]] = None,
+    threshold: float = 0.10,
+    backend: str = "serial",
+    shards: Optional[int] = None,
+    atlas: Optional[AnomalyAtlas] = None,
+    chunk_size: int = 8,
+    max_instances: Optional[int] = None,
+    reps: int = 3,
+    use_pallas: bool = False,
+    dtype: str = "float32",
+    executor=None,
+    progress: Optional[Callable[[int, int, Instance], None]] = None,
+) -> SweepResult:
+    """Measure + classify a set of instances — the one measurement path.
+
+    * ``backend="serial"``  — this process, ``runner`` (or a fresh
+      ``BlasRunner``) measuring point by point.
+    * ``backend="process"`` — shard across ``shards`` worker processes;
+      requires a picklable zero-arg ``runner_factory`` (e.g.
+      ``functools.partial(BlasRunner, reps=3)``) since runners hold
+      unshippable state (cache-flush buffers, BLAS handles).
+    * ``backend="jax"``     — shard across JAX devices with device-pinned
+      :class:`~repro.core.runners.JaxRunner` instances (``reps``,
+      ``use_pallas``, ``dtype`` configure them).
+
+    Points already present in ``atlas`` are *skipped* (served from disk) —
+    that is what makes a restarted sweep resume instead of re-measuring.
+    Newly measured instances stream into the atlas and are flushed in
+    chunks. ``max_instances`` caps new measurements (budgeted/partial
+    sweeps). Requested-point order is preserved in the result regardless
+    of backend completion order. ``executor`` (process backend only) is an
+    existing ``ProcessPoolExecutor`` to reuse across many sweep calls; it
+    is left open for the caller.
+    """
+    if atlas is not None and abs(atlas.threshold - threshold) > 1e-12:
+        raise ValueError(
+            f"atlas {atlas.path} records threshold {atlas.threshold}, but "
+            f"sweep() was called with threshold {threshold} — cached and "
+            f"new classifications would silently disagree")
+    if runner is not None and backend != "serial":
+        raise ValueError(
+            f"runner= only configures the serial backend; backend="
+            f"{backend!r} builds its own workers (pass runner_factory for "
+            f"'process', or reps/use_pallas/dtype for 'jax') — refusing to "
+            f"silently measure with a different configuration")
+    want = list(dict.fromkeys(tuple(int(x) for x in p) for p in points))
+    cached: Dict[Tuple[int, ...], Instance] = {}
+    todo: List[Tuple[int, ...]] = []
+    for p in want:
+        hit = atlas.get(p) if atlas is not None else None
+        if hit is not None:
+            cached[p] = hit
+        else:
+            todo.append(p)
+    if max_instances is not None:
+        todo = todo[:max_instances]
+
+    measured: Dict[Tuple[int, ...], Instance] = {}
+    n_total = len(todo)
+    t0 = _time.perf_counter()
+
+    def on_done(inst: Instance) -> None:
+        measured[inst.point] = inst
+        if atlas is not None:
+            atlas.append(inst)
+        if progress is not None:
+            progress(len(measured), n_total, inst)
+
+    try:
+        if not todo:
+            pass
+        elif backend == "serial":
+            r = runner
+            if r is None:
+                r = runner_factory() if runner_factory else BlasRunner(
+                    reps=reps)
+            _run_serial(spec, todo, r, threshold, on_done)
+        elif backend == "process":
+            if runner_factory is None:
+                runner_factory = functools.partial(BlasRunner, reps=reps)
+            _run_process_pool(spec, todo, runner_factory, threshold,
+                              shards or os.cpu_count() or 1, chunk_size,
+                              on_done, executor=executor)
+        elif backend == "jax":
+            _run_jax_devices(spec, todo, threshold, reps, use_pallas, dtype,
+                             shards, on_done)
+        else:
+            raise ValueError(
+                f"unknown backend {backend!r}; expected serial|process|jax")
+    finally:
+        if atlas is not None:
+            atlas.flush()
+
+    records = [cached.get(p) or measured[p] for p in want
+               if p in cached or p in measured]
+    return SweepResult(
+        spec_name=spec.name,
+        records=records,
+        n_measured=len(measured),
+        n_skipped=len(cached),
+        wall_s=_time.perf_counter() - t0,
+        atlas_path=atlas.path if atlas is not None else None,
+    )
+
+
+# --------------------------------------------- batched kernel measurement ---
+
+
+def collect_unique_calls(
+    spec: ExpressionSpec, points: Iterable[Sequence[int]],
+) -> List[KernelCall]:
+    """Distinct kernel calls across every algorithm of every point.
+
+    Across a grid, neighbouring instances' algorithms share most calls, so
+    the unique set is far smaller than the naive call stream — this dedup
+    is what makes predicted sweeps (and Experiment 3) cheap.
+    """
+    seen: Dict[KernelCall, None] = {}
+    for p in points:
+        for a in spec.algorithms(p):
+            for call in a.calls:
+                seen.setdefault(call)
+    return list(seen)
+
+
+def benchmark_unique_calls(
+    runner,
+    calls: Iterable[KernelCall],
+    profile: Optional[TableProfile] = None,
+    reps: Optional[int] = None,
+    progress: Optional[Callable[[int, int, KernelCall], None]] = None,
+) -> Tuple[TableProfile, int, int]:
+    """Benchmark the deduplicated call set, reusing ``profile`` entries.
+
+    Returns ``(profile, n_measured, n_reused)``. Calls the profile already
+    covers are never re-measured — so a persisted calibration makes repeat
+    sweeps nearly free, and every new measurement lands in the profile for
+    the *next* consumer (the calibration-cache feedback loop).
+    """
+    calls = list(dict.fromkeys(calls))
+    if profile is None:
+        profile = TableProfile(peak_flops=1.0)
+    n_measured = n_reused = 0
+    for i, call in enumerate(calls):
+        if call in profile:
+            n_reused += 1
+            continue
+        if isinstance(runner, JaxRunner):
+            seconds = runner.benchmark_call(
+                call, reps=reps or runner.reps, dtype=runner.dtype)
+        else:
+            seconds = runner.benchmark_call(call, reps=reps)
+        profile.record(call, seconds)
+        n_measured += 1
+        if seconds > 0 and call.flops:
+            # cached profiles included: a newly observed best throughput
+            # raises peak_flops so efficiency stays a true fraction
+            profile.observe_peak(call.flops / seconds)
+        if progress is not None:
+            progress(i + 1, len(calls), call)
+    return profile, n_measured, n_reused
+
+
+def predict_classifications(
+    spec: ExpressionSpec,
+    points: Iterable[Sequence[int]],
+    profile: KernelProfile,
+    threshold: float = 0.10,
+    dtype_bytes: int = 8,
+) -> Dict[Tuple[int, ...], Classification]:
+    """Classify every point from the additive per-kernel model (no timing).
+
+    This is the paper's Experiment-3 prediction generalized to arbitrary
+    point sets: with a calibrated profile it maps anomaly regions at grid
+    scale in milliseconds.
+    """
+    out: Dict[Tuple[int, ...], Classification] = {}
+    for p in points:
+        p = tuple(int(x) for x in p)
+        algos = spec.algorithms(p)
+        times = {a.name: predict_algorithm_time(a.calls, profile, dtype_bytes)
+                 for a in algos}
+        flops = {a.name: a.flops for a in algos}
+        out[p] = classify(times, flops, threshold=threshold)
+    return out
+
+
+# ------------------------------------------------------------- clustering ---
+
+
+def cluster_sweep(
+    records: Iterable[Instance],
+    grid: GridSpec,
+) -> List[Region]:
+    """Cluster a swept grid's anomalies into contiguous regions.
+
+    Records off the grid (e.g. random-search points sharing the atlas) are
+    ignored — adjacency is only defined on the grid's axes.
+    """
+    axes_sets = [set(ax) for ax in grid.axes]
+    scores: Dict[Tuple[int, ...], Tuple[float, float]] = {}
+    for r in records:
+        if not r.cls.is_anomaly:
+            continue
+        if all(v in s for v, s in zip(r.point, axes_sets)):
+            scores[r.point] = (r.cls.time_score, r.cls.flop_score)
+    return cluster_regions(scores, grid.axes)
+
+
+def cluster_predictions(
+    predicted: Mapping[Tuple[int, ...], Classification],
+    grid: GridSpec,
+) -> List[Region]:
+    """Cluster predicted (model-only) classifications over a grid."""
+    scores = {p: (c.time_score, c.flop_score)
+              for p, c in predicted.items() if c.is_anomaly}
+    return cluster_regions(scores, grid.axes)
+
+
+# -------------------------------------------------------------------- CLI ---
+
+
+def _note(msg: str, quiet: bool) -> None:
+    if not quiet:
+        print(msg, file=sys.stderr)
+        sys.stderr.flush()
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.sweep",
+        description="Sharded anomaly sweep over a problem-size grid; "
+                    "results persist in the resumable anomaly atlas.")
+    ap.add_argument("--expr", choices=sorted(SPECS), default="aatb",
+                    help="expression family to sweep")
+    ap.add_argument("--grid", default="small",
+                    help=f"named grid {sorted(SWEEP_GRIDS)} or "
+                         "comma-separated axis values, e.g. 64,128,256")
+    ap.add_argument("--mode", choices=("measure", "predict"),
+                    default="measure",
+                    help="measure: time every algorithm per instance; "
+                         "predict: classify from batched per-kernel "
+                         "benchmarks (additive model, feeds the "
+                         "calibration cache)")
+    ap.add_argument("--backend", choices=("blas", "jax"), default="blas")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="worker shards: for blas, >1 fans out over a "
+                         "process pool; for jax, the number of devices to "
+                         "use (0 = all devices)")
+    ap.add_argument("--threshold", type=float, default=0.10)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--no-flush", action="store_true",
+                    help="skip the per-rep cache flush (faster, noisier; "
+                         "smoke/CI use)")
+    ap.add_argument("--limit", type=int, default=None,
+                    help="measure at most N new instances this run "
+                         "(budgeted partial sweep; resume later)")
+    ap.add_argument("--atlas-dir", type=Path, default=None,
+                    help="atlas directory (default: $REPRO_ATLAS_DIR or "
+                         "the shared cache under ~/.cache/repro/atlas)")
+    ap.add_argument("--fresh", action="store_true",
+                    help="delete any existing atlas file first")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    spec = SPECS[args.expr]
+    if args.grid in SWEEP_GRIDS:
+        grid = GridSpec.named(args.grid, spec.ndims)
+    else:
+        try:
+            values = [int(v) for v in args.grid.split(",") if v.strip()]
+        except ValueError:
+            ap.error(f"--grid must name one of {sorted(SWEEP_GRIDS)} or "
+                     f"be comma-separated ints; got {args.grid!r}")
+        grid = GridSpec.uniform(values, spec.ndims)
+    points = grid.points()
+
+    dtype = "float64" if args.backend == "blas" else "float32"
+    fp = current_fingerprint(backend=args.backend, dtype=dtype)
+    path = atlas_path(spec.name, fp, args.threshold, args.atlas_dir)
+    if args.fresh and path.is_file():
+        path.unlink()
+    atlas = AnomalyAtlas(path, fp, spec.name, args.threshold)
+
+    _note(f"sweep {spec.name} grid={grid.name} "
+          f"({grid.n_points} instances over {spec.ndims} dims), "
+          f"backend={args.backend} shards={args.shards}", args.quiet)
+    _note(f"atlas: {path} ({len(atlas)} instances already recorded)",
+          args.quiet)
+
+    if args.mode == "predict":
+        return _main_predict(args, spec, grid, points, atlas, dtype, fp)
+
+    def progress(i, n, inst):
+        if not args.quiet and (i % 25 == 0 or i == n):
+            _note(f"  [{i}/{n}] {inst.point} "
+                  f"{'ANOMALY' if inst.cls.is_anomaly else 'ok'} "
+                  f"ts={inst.cls.time_score:.1%}", args.quiet)
+
+    kwargs = dict(threshold=args.threshold, atlas=atlas,
+                  max_instances=args.limit, reps=args.reps,
+                  progress=progress)
+    if args.backend == "jax":
+        res = sweep(spec, points, backend="jax",
+                    shards=args.shards or None,  # 0 = every device
+                    **kwargs)
+    elif args.shards > 1:
+        factory = functools.partial(BlasRunner, reps=args.reps,
+                                    flush_cache=not args.no_flush)
+        res = sweep(spec, points, backend="process", shards=args.shards,
+                    runner_factory=factory, **kwargs)
+    else:
+        res = sweep(spec, points,
+                    runner=BlasRunner(reps=args.reps,
+                                      flush_cache=not args.no_flush),
+                    **kwargs)
+
+    print(f"sweep {spec.name}/{grid.name}: points={res.n_points} "
+          f"measured={res.n_measured} skipped={res.n_skipped} "
+          f"anomalies={len(res.anomalies)} "
+          f"({res.anomaly_rate:.1%}) in {res.wall_s:.1f}s "
+          f"[{res.instances_per_s:.1f} inst/s]")
+    regions = cluster_sweep(res.records, grid)
+    print(region_summary(regions, res.n_points))
+    print(f"atlas written to {res.atlas_path}")
+    return 0
+
+
+def _main_predict(args, spec, grid, points, atlas, dtype, fp) -> int:
+    """--mode predict: batched kernel benchmarks → model-only sweep."""
+    if args.backend == "jax":
+        runner = JaxRunner(reps=args.reps, dtype=dtype)
+    else:
+        runner = BlasRunner(reps=args.reps,
+                            flush_cache=not args.no_flush)
+    cached = load_default_profile(backend=args.backend, dtype=dtype)
+    calls = collect_unique_calls(spec, points)
+    t0 = _time.perf_counter()
+    profile, n_meas, n_reused = benchmark_unique_calls(
+        runner, calls, profile=cached, reps=args.reps)
+    bench_s = _time.perf_counter() - t0
+    save_profile(profile, fp, meta={"source": f"sweep:{spec.name}"})
+    predicted = predict_classifications(
+        spec, points, profile, threshold=args.threshold,
+        dtype_bytes=8 if dtype == "float64" else 4)
+    n_anom = sum(1 for c in predicted.values() if c.is_anomaly)
+    print(f"predict {spec.name}/{grid.name}: points={len(points)} "
+          f"unique_kernels={len(calls)} measured={n_meas} "
+          f"reused={n_reused} in {bench_s:.1f}s; "
+          f"predicted anomalies={n_anom} ({n_anom / len(points):.1%})")
+    regions = cluster_predictions(predicted, grid)
+    print(region_summary(regions, len(points)))
+    if len(atlas):
+        # Confusion vs whatever ground truth the atlas already holds.
+        from .anomaly import ConfusionMatrix
+        cm = ConfusionMatrix()
+        for p, c in predicted.items():
+            actual = atlas.get(p)
+            if actual is not None:
+                cm.add(actual.cls.is_anomaly, c.is_anomaly)
+        if cm.total:
+            print(f"vs atlas ground truth ({cm.total} instances): "
+                  f"recall={cm.recall:.1%} precision={cm.precision:.1%}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

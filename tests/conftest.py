@@ -39,9 +39,12 @@ def _register_hypothesis_fallback() -> None:
 
 _register_hypothesis_fallback()
 
-# Point the profile cache away from the developer's real one for the whole
-# session (individual tests override with their own tmp dirs as needed).
-# Unconditional: a pre-existing REPRO_PROFILE_DIR would otherwise leak the
-# machine's real calibration into rankings the tests observe.
+# Point the profile cache and the anomaly atlas away from the developer's
+# real ones for the whole session (individual tests override with their own
+# tmp dirs as needed). Unconditional: a pre-existing REPRO_PROFILE_DIR /
+# REPRO_ATLAS_DIR would otherwise leak the machine's real calibration (or
+# swept ground truth) into what the tests observe.
 os.environ["REPRO_PROFILE_DIR"] = tempfile.mkdtemp(
     prefix="repro-test-profiles-")
+os.environ["REPRO_ATLAS_DIR"] = tempfile.mkdtemp(
+    prefix="repro-test-atlas-")

@@ -1,0 +1,54 @@
+"""Docs tree: the three pages exist and every intra-repo markdown link
+resolves (same check the CI ``docs`` job runs via tools/check_links.py)."""
+
+import importlib.util
+import pathlib
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _load_checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_links", REPO / "tools" / "check_links.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_docs_pages_exist():
+    for page in ("architecture.md", "calibration.md", "discriminants.md"):
+        path = REPO / "docs" / page
+        assert path.is_file(), page
+        assert path.read_text().strip().startswith("#"), page
+
+
+def test_readme_links_into_docs():
+    text = (REPO / "README.md").read_text()
+    for page in ("docs/architecture.md", "docs/calibration.md",
+                 "docs/discriminants.md"):
+        assert page in text, page
+    assert "repro.core.sweep" in text  # quickstart runs the sweep engine
+
+
+def test_all_intra_repo_markdown_links_resolve(capsys):
+    checker = _load_checker()
+    rc = checker.main(["check_links", str(REPO)])
+    err = capsys.readouterr().err
+    assert rc == 0, f"broken links:\n{err}"
+
+
+def test_checker_catches_broken_links(tmp_path):
+    (tmp_path / "a.md").write_text("see [missing](nope/gone.md) "
+                                   "and [ok](b.md)")
+    (tmp_path / "b.md").write_text("# b\n[external](https://x.test/y) "
+                                   "[anchor](#top) [badge](../../escape.md)")
+    checker = _load_checker()
+    assert checker.main(["check_links", str(tmp_path)]) == 1
+    (tmp_path / "nope").mkdir()
+    (tmp_path / "nope" / "gone.md").write_text("# found")
+    assert checker.main(["check_links", str(tmp_path)]) == 0
+    # leading-slash links resolve against the repo root (GitHub-style)
+    (tmp_path / "nope" / "deep.md").write_text("[abs](/b.md)")
+    assert checker.main(["check_links", str(tmp_path)]) == 0
+    (tmp_path / "nope" / "deep.md").write_text("[abs](/missing.md)")
+    assert checker.main(["check_links", str(tmp_path)]) == 1

@@ -1,0 +1,425 @@
+"""Sweep engine: atlas resumability (kill mid-sweep, restart, no duplicate
+instances), sharding equivalence (serial vs process-pool sweeps agree),
+region clustering on synthetic masks, batched kernel dedup, and the CLI
+(ISSUE 2)."""
+
+import json
+
+import pytest
+
+from repro.core.anomaly import cluster_regions
+from repro.core.profile_store import HardwareFingerprint
+from repro.core.perfmodel import AnalyticalTPUProfile, TableProfile
+from repro.core.sweep import (
+    GRAM_AATB,
+    SWEEP_GRIDS,
+    AnomalyAtlas,
+    AtlasError,
+    GridSpec,
+    atlas_path,
+    benchmark_unique_calls,
+    cluster_sweep,
+    collect_unique_calls,
+    main as sweep_main,
+    measure_instance,
+    predict_classifications,
+    sweep,
+)
+from repro.core.experiments import experiment1_random_search
+from repro.core.flops import gemm, syrk
+
+FP = HardwareFingerprint(backend="blas", device="testdev", dtype="float64")
+
+GRID = GridSpec.uniform((32, 64, 96), GRAM_AATB.ndims, name="test")
+
+
+class DeterministicRunner:
+    """FLOP-proportional fake timer with a SYRK cliff at m >= 64.
+
+    For AAᵀB this makes the FLOP-cheapest (SYRK-based) algorithms slower
+    than the GEMM-based ones exactly when d0 >= 64 — so every grid point
+    with d0 >= 64 is an anomaly, deterministically, with zero noise.
+    Top-level class: instances/factories pickle across the process pool.
+    """
+
+    def make_operands(self, alg):
+        return {}
+
+    def time_algorithm(self, alg, operands=None):
+        t = 0.0
+        for call in alg.calls:
+            t += call.flops * 1e-9
+            if call.kind == "syrk" and call.dims[0] >= 64:
+                t += call.flops * 3e-9
+            if call.kind == "tri2full":
+                t += 1e-6
+        return t
+
+
+def _expected_anomaly(point):
+    """First-principles oracle: anomalous iff the FLOP-cheapest algorithms
+    all use SYRK (pure FLOP arithmetic, no timing) and the runner's SYRK
+    cliff applies (d0 >= 64)."""
+    algos = GRAM_AATB.algorithms(point)
+    fmin = min(a.flops for a in algos)
+    cheapest = [a for a in algos if a.flops == fmin]
+    all_syrk = all(any(c.kind == "syrk" for c in a.calls) for a in cheapest)
+    return all_syrk and point[0] >= 64
+
+
+# ------------------------------------------------------------------ grids --
+
+def test_grid_spec_points_and_named_grids():
+    g = GridSpec.uniform((64, 32), 3)
+    assert g.axes == ((32, 64),) * 3
+    assert g.n_points == 8
+    pts = g.points()
+    assert len(pts) == 8 and len(set(pts)) == 8
+    assert pts[0] == (32, 32, 32) and pts[-1] == (64, 64, 64)
+    for name in SWEEP_GRIDS:
+        assert GridSpec.named(name, 2).n_points == len(SWEEP_GRIDS[name]) ** 2
+    with pytest.raises(ValueError):
+        GridSpec(name="bad", axes=((64, 32),))  # unsorted
+    with pytest.raises(ValueError):
+        GridSpec.named("nope", 3)
+
+
+# ------------------------------------------------------------ measurement --
+
+def test_sweep_serial_classifies_deterministically(tmp_path):
+    atlas = AnomalyAtlas(tmp_path / "a.jsonl", FP, GRAM_AATB.name, 0.10)
+    res = sweep(GRAM_AATB, GRID.points(), runner=DeterministicRunner(),
+                threshold=0.10, atlas=atlas)
+    assert res.n_measured == GRID.n_points and res.n_skipped == 0
+    assert len(res.records) == GRID.n_points
+    for r in res.records:
+        assert r.cls.is_anomaly == _expected_anomaly(r.point), r.point
+        # engine result matches a direct measure_instance
+        direct = measure_instance(GRAM_AATB, r.point,
+                                  DeterministicRunner(), 0.10)
+        assert direct.cls == r.cls
+        assert direct.times == r.times
+    assert (tmp_path / "a.jsonl").is_file()
+
+
+def test_sweep_result_preserves_requested_order(tmp_path):
+    pts = list(reversed(GRID.points()))
+    res = sweep(GRAM_AATB, pts, runner=DeterministicRunner())
+    assert [r.point for r in res.records] == pts
+
+
+# ------------------------------------------------------------ resumability --
+
+def test_killed_sweep_resumes_without_duplicates(tmp_path):
+    path = tmp_path / "atlas.jsonl"
+    # First run dies after 10 instances (budget cap stands in for a kill
+    # right after a chunk flush).
+    atlas = AnomalyAtlas(path, FP, GRAM_AATB.name, 0.10, chunk_size=5)
+    res1 = sweep(GRAM_AATB, GRID.points(), runner=DeterministicRunner(),
+                 atlas=atlas, max_instances=10)
+    assert res1.n_measured == 10 and len(atlas) == 10
+
+    # Restart from disk: only the remaining 17 are measured.
+    atlas2 = AnomalyAtlas(path, FP, GRAM_AATB.name, 0.10)
+    assert len(atlas2) == 10
+    res2 = sweep(GRAM_AATB, GRID.points(), runner=DeterministicRunner(),
+                 atlas=atlas2)
+    assert res2.n_skipped == 10
+    assert res2.n_measured == GRID.n_points - 10
+    assert len(atlas2) == GRID.n_points
+
+    # No duplicate instances on disk: header + one line per point.
+    lines = path.read_text().strip().splitlines()
+    assert len(lines) == 1 + GRID.n_points
+    pts = [tuple(json.loads(li)["point"]) for li in lines[1:]]
+    assert len(set(pts)) == GRID.n_points
+
+    # A third run measures nothing at all.
+    atlas3 = AnomalyAtlas(path, FP, GRAM_AATB.name, 0.10)
+    res3 = sweep(GRAM_AATB, GRID.points(), runner=DeterministicRunner(),
+                 atlas=atlas3)
+    assert res3.n_measured == 0 and res3.n_skipped == GRID.n_points
+
+
+def test_unflushed_chunk_is_lost_but_flushed_chunks_survive(tmp_path):
+    path = tmp_path / "atlas.jsonl"
+    atlas = AnomalyAtlas(path, FP, GRAM_AATB.name, 0.10, chunk_size=100)
+    pts = GRID.points()
+    for p in pts[:5]:
+        atlas.append(measure_instance(GRAM_AATB, p, DeterministicRunner(),
+                                      0.10))
+    atlas.flush()  # chunk boundary
+    for p in pts[5:8]:
+        atlas.append(measure_instance(GRAM_AATB, p, DeterministicRunner(),
+                                      0.10))
+    # no flush: the process "dies" here — at most one chunk is lost
+    resumed = AnomalyAtlas(path, FP, GRAM_AATB.name, 0.10)
+    assert len(resumed) == 5
+    assert all(p in resumed for p in pts[:5])
+
+
+def test_torn_tail_line_is_tolerated(tmp_path):
+    path = tmp_path / "atlas.jsonl"
+    atlas = AnomalyAtlas(path, FP, GRAM_AATB.name, 0.10)
+    res = sweep(GRAM_AATB, GRID.points()[:6], runner=DeterministicRunner(),
+                atlas=atlas)
+    assert res.n_measured == 6
+    with path.open("a") as f:
+        f.write('{"point": [128, 128,')  # killed mid-write, no newline
+    resumed = AnomalyAtlas(path, FP, GRAM_AATB.name, 0.10)
+    assert len(resumed) == 6
+    assert resumed.skipped_lines == 1
+    # and the resumed atlas still appends cleanly after the torn tail
+    res2 = sweep(GRAM_AATB, GRID.points()[:8], runner=DeterministicRunner(),
+                 atlas=resumed)
+    assert res2.n_measured == 2 and res2.n_skipped == 6
+
+
+def test_torn_header_recovers_with_sidecar(tmp_path):
+    path = tmp_path / "atlas.jsonl"
+    path.write_text('{"kind": "head')  # killed mid-write of line 1
+    atlas = AnomalyAtlas(path, FP, GRAM_AATB.name, 0.10)
+    assert len(atlas) == 0
+    assert atlas.recovered_from is not None
+    assert atlas.recovered_from.read_text() == '{"kind": "head'
+    # ...and the fresh atlas works end to end
+    res = sweep(GRAM_AATB, GRID.points()[:3], runner=DeterministicRunner(),
+                atlas=atlas)
+    assert res.n_measured == 3
+    assert len(AnomalyAtlas(path, FP, GRAM_AATB.name, 0.10)) == 3
+
+
+def test_sweep_rejects_atlas_threshold_mismatch(tmp_path):
+    atlas = AnomalyAtlas(tmp_path / "a.jsonl", FP, GRAM_AATB.name, 0.10)
+    with pytest.raises(ValueError, match="threshold"):
+        sweep(GRAM_AATB, GRID.points()[:2], runner=DeterministicRunner(),
+              threshold=0.05, atlas=atlas)
+
+
+def test_sweep_rejects_runner_on_sharded_backends():
+    # a runner's config (reps, cache flushing) would be silently dropped
+    with pytest.raises(ValueError, match="serial"):
+        sweep(GRAM_AATB, GRID.points()[:2], runner=DeterministicRunner(),
+              backend="process", runner_factory=DeterministicRunner)
+    with pytest.raises(ValueError, match="serial"):
+        sweep(GRAM_AATB, GRID.points()[:2], runner=DeterministicRunner(),
+              backend="jax")
+
+
+def test_atlas_rejects_wrong_fingerprint_and_config(tmp_path):
+    path = tmp_path / "atlas.jsonl"
+    with AnomalyAtlas(path, FP, GRAM_AATB.name, 0.10) as atlas:
+        atlas.append(measure_instance(GRAM_AATB, (32, 32, 32),
+                                      DeterministicRunner(), 0.10))
+    other = HardwareFingerprint(backend="jax", device="TPU v5e",
+                                dtype="bfloat16")
+    with pytest.raises(AtlasError):
+        AnomalyAtlas(path, other, GRAM_AATB.name, 0.10)
+    with pytest.raises(AtlasError):
+        AnomalyAtlas(path, FP, "ABCD", 0.10)
+    with pytest.raises(AtlasError):
+        AnomalyAtlas(path, FP, GRAM_AATB.name, 0.05)
+    # the honest configuration still opens
+    assert len(AnomalyAtlas(path, FP, GRAM_AATB.name, 0.10)) == 1
+
+
+# ----------------------------------------------------- sharding equivalence --
+
+def test_process_sharded_sweep_equals_serial(tmp_path):
+    serial_atlas = AnomalyAtlas(tmp_path / "serial.jsonl", FP,
+                                GRAM_AATB.name, 0.10)
+    serial = sweep(GRAM_AATB, GRID.points(), runner=DeterministicRunner(),
+                   atlas=serial_atlas)
+    sharded_atlas = AnomalyAtlas(tmp_path / "sharded.jsonl", FP,
+                                 GRAM_AATB.name, 0.10)
+    sharded = sweep(GRAM_AATB, GRID.points(), backend="process", shards=2,
+                    runner_factory=DeterministicRunner, chunk_size=4,
+                    atlas=sharded_atlas)
+    assert sharded.n_measured == serial.n_measured == GRID.n_points
+    a = {r.point: (r.cls, r.times, r.flops) for r in serial.records}
+    b = {r.point: (r.cls, r.times, r.flops) for r in sharded.records}
+    assert a == b  # deterministic runner -> identical atlases, exactly
+
+    # the two atlases re-open to identical contents too
+    ra = AnomalyAtlas(tmp_path / "serial.jsonl", FP, GRAM_AATB.name, 0.10)
+    rb = AnomalyAtlas(tmp_path / "sharded.jsonl", FP, GRAM_AATB.name, 0.10)
+    assert {r.point: r.cls for r in ra.records()} == \
+        {r.point: r.cls for r in rb.records()}
+
+
+def test_jax_backend_smoke(tmp_path):
+    # Real timing on however many JAX devices exist (1 in CI): just the
+    # contract — everything measured once, records complete.
+    g = GridSpec.uniform((8, 16), GRAM_AATB.ndims)
+    atlas = AnomalyAtlas(tmp_path / "jax.jsonl", FP, GRAM_AATB.name, 0.10)
+    res = sweep(GRAM_AATB, g.points(), backend="jax", reps=1, atlas=atlas)
+    assert res.n_measured == g.n_points
+    assert all(set(r.times) == set(r.flops) for r in res.records)
+    assert len(atlas) == g.n_points
+
+
+# ------------------------------------------------------------- clustering --
+
+def test_cluster_regions_synthetic_mask():
+    axes = [(10, 20, 30, 40), (10, 20, 30, 40)]
+    scores = {
+        # L-shaped component of three points...
+        (10, 10): (0.30, 0.10),
+        (20, 10): (0.50, 0.20),
+        (20, 20): (0.10, 0.30),
+        # ...and an isolated singleton across the grid.
+        (40, 40): (0.90, 0.40),
+    }
+    regions = cluster_regions(scores, axes)
+    assert [r.size for r in regions] == [3, 1]
+    big, small = regions
+    assert set(big.points) == {(10, 10), (20, 10), (20, 20)}
+    assert big.lo == (10, 10) and big.hi == (20, 20)
+    assert big.max_time_score == pytest.approx(0.50)
+    assert big.mean_time_score == pytest.approx(0.30)
+    assert big.mean_flop_score == pytest.approx(0.20)
+    assert small.points == ((40, 40),)
+    assert small.max_flop_score == pytest.approx(0.40)
+
+
+def test_cluster_regions_positional_adjacency_not_metric():
+    # (64, 128) are adjacent grid positions even though they differ by 64.
+    axes = [(32, 64, 128)]
+    regions = cluster_regions({(64,): (0.2, 0.1), (128,): (0.2, 0.1)}, axes)
+    assert len(regions) == 1 and regions[0].size == 2
+
+
+def test_cluster_sweep_matches_expected_region(tmp_path):
+    res = sweep(GRAM_AATB, GRID.points(), runner=DeterministicRunner())
+    regions = cluster_sweep(res.records, GRID)
+    expected = {p for p in GRID.points() if _expected_anomaly(p)}
+    assert expected  # the cliff must actually produce anomalies
+    # they form one contiguous region covering exactly the expected set
+    assert len(regions) == 1
+    assert set(regions[0].points) == expected
+    assert regions[0].lo == (64, 64, 32) and regions[0].hi == (96, 96, 96)
+
+
+def test_cluster_sweep_ignores_off_grid_records():
+    res = sweep(GRAM_AATB, [(64, 32, 32), (65, 32, 32)],
+                runner=DeterministicRunner())
+    regions = cluster_sweep(res.records, GRID)  # (65,..) is off-grid
+    assert sum(r.size for r in regions) <= 1
+
+
+# ------------------------------------------------- batched kernel benching --
+
+class CountingRunner:
+    def __init__(self):
+        self.calls = []
+
+    def benchmark_call(self, call, reps=None):
+        self.calls.append(call)
+        return 1e-6 * max(1, call.flops) ** 0.5
+
+
+def test_benchmark_unique_calls_dedups_and_reuses_profile():
+    runner = CountingRunner()
+    calls = [gemm(64, 64, 64), gemm(64, 64, 64), syrk(64, 64),
+             gemm(64, 64, 64), syrk(64, 64)]
+    profile = TableProfile(1e11, table={("syrk", (64, 64)): 5e-5})
+    profile, n_meas, n_reused = benchmark_unique_calls(
+        runner, calls, profile=profile)
+    assert n_meas == 1 and n_reused == 1            # 2 unique, 1 cached
+    assert len(runner.calls) == 1                   # duplicates never timed
+    assert profile.table[("syrk", (64, 64))] == 5e-5  # cache untouched
+    # a second pass over the same stream measures nothing
+    _, n_meas2, n_reused2 = benchmark_unique_calls(runner, calls,
+                                                   profile=profile)
+    assert n_meas2 == 0 and n_reused2 == 2
+
+
+def test_benchmark_unique_calls_raises_cached_profile_peak():
+    class FastRunner:
+        def benchmark_call(self, call, reps=None):
+            return 1e-9  # absurdly fast -> throughput far above old peak
+
+    profile = TableProfile(1e3, table={("syrk", (64, 64)): 5e-5})
+    call = gemm(64, 64, 64)
+    benchmark_unique_calls(FastRunner(), [call], profile=profile)
+    assert profile.peak() >= call.flops / 1e-9  # stale peak was raised
+    assert profile.efficiency(call) <= 1.0
+
+
+def test_collect_unique_calls_shrinks_grid_call_stream():
+    pts = GRID.points()
+    unique = collect_unique_calls(GRAM_AATB, pts)
+    total = sum(len(a.calls) for p in pts for a in GRAM_AATB.algorithms(p))
+    assert len(unique) == len(set(unique))
+    assert len(unique) < total / 2  # the dedup is what makes predict cheap
+
+
+def test_predict_classifications_covers_every_point():
+    pts = GRID.points()[:6]
+    out = predict_classifications(GRAM_AATB, pts, AnalyticalTPUProfile(),
+                                  threshold=0.05)
+    assert set(out) == set(pts)
+    for cls in out.values():
+        assert cls.cheapest and cls.fastest
+
+
+# ------------------------------------------------- experiments on the engine --
+
+def test_experiment1_runs_through_engine_and_resumes(tmp_path):
+    atlas = AnomalyAtlas(tmp_path / "e1.jsonl", FP, GRAM_AATB.name, 0.10)
+    r1 = experiment1_random_search(
+        GRAM_AATB, DeterministicRunner(), box=(32, 96), n_anomalies=5,
+        max_samples=50, threshold=0.10, seed=3, atlas=atlas)
+    assert r1.anomalies and r1.samples <= 50
+    for inst in r1.anomalies:
+        assert inst.cls.is_anomaly
+    # identical re-run is served from the atlas: nothing new on disk
+    atlas2 = AnomalyAtlas(tmp_path / "e1.jsonl", FP, GRAM_AATB.name, 0.10)
+    before = len(atlas2)
+    r2 = experiment1_random_search(
+        GRAM_AATB, DeterministicRunner(), box=(32, 96), n_anomalies=5,
+        max_samples=50, threshold=0.10, seed=3, atlas=atlas2)
+    assert len(atlas2) == before
+    assert [i.point for i in r2.anomalies] == [i.point for i in r1.anomalies]
+
+
+# -------------------------------------------------------------------- CLI --
+
+def test_cli_sweep_writes_resumable_atlas(tmp_path, capsys):
+    args = ["--expr", "aatb", "--grid", "smoke", "--reps", "1",
+            "--no-flush", "--atlas-dir", str(tmp_path), "--quiet"]
+    assert sweep_main(args) == 0
+    out1 = capsys.readouterr().out
+    assert "measured=8" in out1 and "skipped=0" in out1
+
+    files = list(tmp_path.glob("atlas-aatb-*.jsonl"))
+    assert len(files) == 1  # named by expr + threshold + fingerprint
+
+    # re-run: every instance is served from the atlas
+    assert sweep_main(args) == 0
+    out2 = capsys.readouterr().out
+    assert "measured=0" in out2 and "skipped=8" in out2
+
+
+def test_cli_predict_mode_feeds_profile_cache(tmp_path, monkeypatch,
+                                              capsys):
+    monkeypatch.setenv("REPRO_PROFILE_DIR", str(tmp_path / "profiles"))
+    args = ["--expr", "aatb", "--grid", "smoke", "--reps", "1",
+            "--no-flush", "--mode", "predict",
+            "--atlas-dir", str(tmp_path), "--quiet"]
+    assert sweep_main(args) == 0
+    out = capsys.readouterr().out
+    assert "predicted anomalies=" in out
+    profiles = list((tmp_path / "profiles").glob("profile-*.json"))
+    assert len(profiles) == 1  # batched benchmarks landed in the cache
+    n_entries = len(json.loads(profiles[0].read_text())["entries"])
+    assert n_entries > 0
+    # second predict run reuses every cached kernel timing
+    assert sweep_main(args) == 0
+    out2 = capsys.readouterr().out
+    assert "measured=0" in out2
+
+
+def test_atlas_path_is_fingerprint_keyed(tmp_path):
+    p = atlas_path("AATB", FP, 0.10, tmp_path)
+    assert p.name == "atlas-aatb-t0p1-blas-testdev-float64.jsonl"

@@ -1,0 +1,100 @@
+#!/usr/bin/env python3
+"""Check that intra-repo markdown links resolve to real files.
+
+Scans every tracked ``*.md`` under the repo root (skipping VCS/venv
+directories) for inline links/images ``[text](target)`` and reference
+definitions ``[ref]: target``, and verifies that each *relative* target
+exists on disk. External links (``http(s)://``, ``mailto:``), pure
+anchors (``#section``) and targets that resolve outside the repository
+(e.g. GitHub web paths like ``../../actions/...``) are ignored — this is
+a filesystem check, not a crawler. Anchors on existing files
+(``file.md#section``) are checked for the file part only.
+
+Exit status 1 lists every broken link; used by the CI ``docs`` job and
+``tests/test_docs.py``.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+SKIP_DIRS = {".git", ".venv", "node_modules", "__pycache__", ".ruff_cache",
+             ".pytest_cache", "build", "dist"}
+
+# Machine-extracted reference material (arxiv retrieval artifacts), not
+# authored docs — their figure refs were never part of this repo.
+SKIP_FILES = {"PAPER.md", "PAPERS.md", "SNIPPETS.md"}
+
+# Inline links/images: [text](target "title"); ignores ](... inside code
+# spans well enough for docs written by humans.
+_INLINE = re.compile(r"!?\[[^\]]*\]\(\s*<?([^)\s>]+)>?(?:\s+\"[^\"]*\")?\s*\)")
+# Reference definitions: [ref]: target
+_REFDEF = re.compile(r"^\s*\[[^\]]+\]:\s+<?(\S+?)>?\s*$", re.MULTILINE)
+
+
+def _strip_code(text: str) -> str:
+    """Drop fenced code blocks and inline code spans (no links in code)."""
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    return re.sub(r"`[^`\n]*`", "", text)
+
+
+def iter_md_files(root: Path):
+    for path in sorted(root.rglob("*.md")):
+        if any(part in SKIP_DIRS for part in path.parts):
+            continue
+        if path.parent == root and path.name in SKIP_FILES:
+            continue
+        yield path
+
+
+def check_file(path: Path, root: Path) -> list:
+    """Return (line_hint, target) for every broken relative link."""
+    text = _strip_code(path.read_text(encoding="utf-8"))
+    targets = _INLINE.findall(text) + _REFDEF.findall(text)
+    broken = []
+    for t in targets:
+        if re.match(r"^[a-zA-Z][a-zA-Z0-9+.-]*:", t):  # http:, mailto:, ...
+            continue
+        if t.startswith("#") or not t:
+            continue
+        file_part = t.split("#", 1)[0]
+        if not file_part:
+            continue
+        if file_part.startswith("/"):
+            # GitHub resolves leading-slash links against the repo root.
+            resolved = (root / file_part.lstrip("/")).resolve()
+        else:
+            resolved = (path.parent / file_part).resolve()
+        try:
+            resolved.relative_to(root.resolve())
+        except ValueError:
+            # Escapes the repo (e.g. GitHub badge web paths) — not ours.
+            continue
+        if not resolved.exists():
+            broken.append((path.relative_to(root), t))
+    return broken
+
+
+def main(argv=None) -> int:
+    root = Path(argv[1]) if argv and len(argv) > 1 else \
+        Path(__file__).resolve().parent.parent
+    n_files = 0
+    n_links_broken = 0
+    for md in iter_md_files(root):
+        n_files += 1
+        for rel, target in check_file(md, root):
+            n_links_broken += 1
+            print(f"BROKEN {rel}: ({target})", file=sys.stderr)
+    if n_links_broken:
+        print(f"{n_links_broken} broken link(s) across {n_files} markdown "
+              f"file(s)", file=sys.stderr)
+        return 1
+    print(f"ok: all intra-repo links resolve across {n_files} markdown "
+          f"file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
