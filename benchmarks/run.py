@@ -23,12 +23,14 @@ def main() -> None:
         roofline,
         ssd_bench,
         sweep_bench,
+        zoo_bench,
     )
 
     sections = [
         ("kernel_profiles (paper Fig 1)", kernel_profiles.main),
         ("calibration subsystem", calibrate_bench.main),
         ("sweep engine (serial vs sharded)", sweep_bench.main),
+        ("expression zoo (enumeration + abundance)", zoo_bench.main),
         ("experiment1 (paper §4.1.1/§4.2.1)", experiment1.main),
         ("experiment2 (paper §4.1.2/§4.2.2)", experiment2.main),
         ("experiment3 (paper Tables 1-2)", experiment3.main),

@@ -1,0 +1,53 @@
+"""Expression-zoo benchmark: per-family enumeration cost + anomaly rates.
+
+Two questions, per registered family:
+
+1. **How expensive is the enumeration layer itself?** `enumerate_algorithms`
+   runs on every planner miss and at every sweep point, so its wall time
+   is engine overhead — measured here per family (us/call), along with
+   the algorithm count and the deduplicated kernel-call count of a small
+   grid (the quantity that bounds predicted-sweep cost).
+2. **Is anomaly abundance expression-dependent?** A real-BLAS smoke sweep
+   per family (shared persistent atlas: repeat runs resume) reports the
+   measured anomaly rate — the paper's `ABCD`-rare vs `AAᵀB`-abundant
+   contrast, extended across the zoo.
+
+REPRO_BENCH_SCALE=full sweeps the `small` grid instead of `smoke`.
+"""
+
+from __future__ import annotations
+
+from repro.core import BlasRunner
+from repro.core.expressions import REGISTRY
+from repro.core.sweep import collect_unique_calls, sweep
+
+from .common import FULL, emit, note, open_atlas, time_call
+
+
+def main():
+    grid_name = "small" if FULL else "smoke"
+    reps = 3 if FULL else 1
+    note(f"\n== expression zoo: {len(REGISTRY)} families, "
+         f"grid={grid_name} ==")
+    note(f"{'expr':<7} {'algs':>5} {'ukernels':>8} {'enum us':>9} "
+         f"{'anomaly rate':>13}")
+    for cli_name in sorted(REGISTRY):
+        spec = REGISTRY[cli_name]
+        grid = spec.grid(grid_name)
+        mid = grid.points()[len(grid.points()) // 2]
+        n_algos = len(spec.algorithms(mid))
+        enum_s = time_call(lambda: spec.algorithms(mid), reps=5)
+        ucalls = len(collect_unique_calls(spec, grid.points()))
+        runner = BlasRunner(reps=reps, flush_cache=False)
+        with open_atlas(spec.name, 0.10) as atlas:
+            res = sweep(spec, grid.points(), runner=runner, atlas=atlas)
+        note(f"{cli_name:<7} {n_algos:>5} {ucalls:>8} "
+             f"{enum_s * 1e6:>9.0f} {res.anomaly_rate:>12.1%}")
+        emit(f"zoo_{cli_name}_enumerate", enum_s * 1e6,
+             f"algorithms={n_algos};unique_kernels={ucalls};"
+             f"anomaly_rate={res.anomaly_rate:.4f};"
+             f"points={res.n_points};measured={res.n_measured}")
+
+
+if __name__ == "__main__":
+    main()

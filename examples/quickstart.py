@@ -60,6 +60,18 @@ def main():
     print(f"  cheapest: {inst.cls.cheapest}")
     print(f"  fastest:  {inst.cls.fastest}")
 
+    # --- 5. the expression zoo ----------------------------------------
+    # Every registered family selects/sweeps through the same machinery;
+    # (AB)(AB)ᵀ enumerates the intermediate-Gram GEMM+SYRK algorithm
+    # that leaf-level inspection cannot see.
+    from repro.core import registered_names, select_expression
+    print(f"registered families: {', '.join(registered_names())}")
+    ranked = select_expression("abab", (256, 64, 512),
+                               discriminant="perfmodel")
+    print(f"abab(256,64,512) perfmodel pick: {ranked[0].name} "
+          f"({ranked[0].flops/1e6:.1f} MFLOPs of "
+          f"{len(ranked)} candidates)")
+
 
 if __name__ == "__main__":
     main()

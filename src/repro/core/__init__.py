@@ -21,7 +21,31 @@ from .anomaly import (
     cluster_regions,
     scan_line,
 )
-from .expr import Chain, Matrix, Transpose, chain, gram_times, matrix_chain
+from .expr import (
+    Chain,
+    Matrix,
+    Transpose,
+    chain,
+    gram_left_times,
+    gram_of_product,
+    gram_right_times,
+    gram_times,
+    matrix_chain,
+    symmetric_sandwich,
+)
+from .expressions import (
+    GRAM_ABAB,
+    GRAM_ABTB,
+    GRAM_ATAB,
+    MATRIX_CHAIN_ABCDE,
+    REGISTRY,
+    SANDWICH_BTSB,
+    ExpressionSpec,
+    GridSpec,
+    get_spec,
+    register,
+    registered_names,
+)
 from .flops import KernelCall, gemm, kernel_flops, symm, syrk, total_flops, tri2full
 from .perfmodel import (
     TPU_V5E,
@@ -50,8 +74,8 @@ from .profile_store import (
     profile_path,
     save_profile,
 )
-from .runners import BlasRunner, JaxRunner, measure_seconds
-from .selector import DISCRIMINANTS, as_hybrid, select
+from .runners import BlasRunner, JaxRunner, measure_seconds, reference_execute
+from .selector import DISCRIMINANTS, as_hybrid, select, select_expression
 
 # Lazy (PEP 562) so `python -m repro.core.calibrate` / `python -m
 # repro.core.sweep` don't import their CLI modules twice (runpy warns when
@@ -61,13 +85,13 @@ from .selector import DISCRIMINANTS, as_hybrid, select
 _LAZY_EXPORTS = {
     "GRIDS": ".calibrate",
     "CalibrationResult": ".calibrate",
+    "expression_calls": ".calibrate",
     "sweep_kernels": ".calibrate",
     # sweep engine (the `sweep` *function* stays module-scoped to keep the
     # submodule name unambiguous, mirroring calibrate)
-    "SWEEP_GRIDS": ".sweep",
+    "SWEEP_GRIDS": ".expressions",
     "AnomalyAtlas": ".sweep",
     "AtlasError": ".sweep",
-    "GridSpec": ".sweep",
     "Instance": ".sweep",
     "SweepResult": ".sweep",
     "atlas_path": ".sweep",
@@ -77,9 +101,8 @@ _LAZY_EXPORTS = {
     "predict_classifications": ".sweep",
     # paper harnesses (import scipy-backed runners; lazy keeps base import
     # light and keeps `sweep` out of sys.modules at package import)
-    "GRAM_AATB": ".experiments",
-    "MATRIX_CHAIN_ABCD": ".experiments",
-    "ExpressionSpec": ".experiments",
+    "GRAM_AATB": ".expressions",
+    "MATRIX_CHAIN_ABCD": ".expressions",
     "experiment1_random_search": ".experiments",
     "experiment2_regions": ".experiments",
     "experiment3_predict_from_benchmarks": ".experiments",
@@ -105,9 +128,14 @@ __all__ = [
     "SweepResult", "atlas_path", "benchmark_unique_calls", "cluster_sweep",
     "collect_unique_calls", "predict_classifications",
     "Chain", "Matrix", "Transpose", "chain", "gram_times", "matrix_chain",
-    "GRAM_AATB", "MATRIX_CHAIN_ABCD", "ExpressionSpec",
+    "gram_left_times", "gram_of_product", "gram_right_times",
+    "symmetric_sandwich",
+    "GRAM_AATB", "MATRIX_CHAIN_ABCD", "MATRIX_CHAIN_ABCDE", "GRAM_ABTB",
+    "GRAM_ATAB", "GRAM_ABAB", "SANDWICH_BTSB", "REGISTRY",
+    "ExpressionSpec", "get_spec", "register", "registered_names",
     "experiment1_random_search", "experiment2_regions",
     "experiment3_predict_from_benchmarks", "measure_instance",
+    "expression_calls",
     "KernelCall", "gemm", "kernel_flops", "symm", "syrk", "total_flops",
     "tri2full",
     "TPU_V5E", "AnalyticalTPUProfile", "HardwareSpec", "HybridProfile",
@@ -118,6 +146,6 @@ __all__ = [
     "FingerprintMismatchError", "HardwareFingerprint", "ProfileStoreError",
     "current_fingerprint", "load_default_profile", "load_profile",
     "profile_path", "save_profile",
-    "BlasRunner", "JaxRunner", "measure_seconds",
-    "DISCRIMINANTS", "as_hybrid", "select",
+    "BlasRunner", "JaxRunner", "measure_seconds", "reference_execute",
+    "DISCRIMINANTS", "as_hybrid", "select", "select_expression",
 ]

@@ -45,6 +45,20 @@ GRIDS = {
 }
 
 
+def expression_calls(spec, grid_name: str = "small") -> List[KernelCall]:
+    """The deduplicated kernel-call set of one registered expression family
+    over its named sweep grid — the targeted alternative to the full
+    :func:`grid_calls` cross product.
+
+    ``python -m repro.core.calibrate --expr NAME`` uses this so a machine
+    can be calibrated for exactly the shapes one family's sweep will
+    predict with (``--mode predict`` in :mod:`repro.core.sweep`), instead
+    of paying for the whole kernel-space cross product.
+    """
+    from .sweep import collect_unique_calls
+    return collect_unique_calls(spec, spec.grid(grid_name).points())
+
+
 def grid_calls(grid: Iterable[int]) -> List[KernelCall]:
     """Every kernel call the sweep measures, in deterministic order.
 
@@ -84,6 +98,7 @@ def sweep_kernels(
     reps: int = 3,
     dtype: Optional[str] = None,
     progress=None,
+    calls: Optional[List[KernelCall]] = None,
 ) -> TableProfile:
     """Benchmark every grid call in isolation; returns the measured table.
 
@@ -93,9 +108,11 @@ def sweep_kernels(
     float64; other runners keep the documented two-arg contract). Peak
     FLOP/s is estimated as the best throughput observed anywhere in the
     sweep, so ``TableProfile.efficiency`` is relative to this machine's
-    own best.
+    own best. ``calls`` overrides the measured set (e.g. one expression
+    family's deduplicated calls from :func:`expression_calls`); ``grid``
+    is ignored then.
     """
-    calls = grid_calls(grid)
+    calls = grid_calls(grid) if calls is None else list(calls)
     table = {}
     peak = 1.0
     for i, call in enumerate(calls):
@@ -120,6 +137,7 @@ def calibrate(
     dtype: Optional[str] = None,
     save: bool = True,
     progress=None,
+    expr: Optional[str] = None,
 ) -> CalibrationResult:
     """Measure + persist this machine's kernel profile.
 
@@ -127,8 +145,18 @@ def calibrate(
     fingerprint so calibrations for different backends/dtypes coexist.
     With ``out=None`` the default cache dir is used — which is exactly
     where ``default_planner()`` looks, closing the loop.
+
+    ``expr`` (a registered expression CLI name, see
+    :mod:`repro.core.expressions`) restricts the measured set to exactly
+    the kernel calls that family's named sweep grid enumerates — ``grid``
+    then names a *sweep* grid (smoke/small/default/full, with per-family
+    overrides) rather than a calibration grid.
     """
-    if grid not in GRIDS:
+    calls = None
+    if expr is not None:
+        from .expressions import get_spec
+        calls = expression_calls(get_spec(expr), grid)
+    elif grid not in GRIDS:
         raise ValueError(f"unknown grid {grid!r}; expected {sorted(GRIDS)}")
     if backend == "blas":
         runner = BlasRunner(reps=reps)
@@ -146,14 +174,27 @@ def calibrate(
         raise ValueError(f"unknown backend {backend!r}; expected blas|jax")
     fp = current_fingerprint(backend=backend, dtype=dtype)
     t0 = time.perf_counter()
-    profile = sweep_kernels(runner, GRIDS[grid], reps=reps, dtype=dtype,
-                            progress=progress)
+    profile = sweep_kernels(runner, GRIDS.get(grid, ()), reps=reps,
+                            dtype=dtype, progress=progress, calls=calls)
     wall = time.perf_counter() - t0
+    if expr is not None:
+        # A family-targeted run is *additive*: merge the new measurements
+        # into whatever calibration this fingerprint already has — saving
+        # the tiny restricted table wholesale would gut a full-grid
+        # calibration sharing the same cache path.
+        from .profile_store import load_profile, profile_path
+        prev_path = profile_path(fp, directory=out)
+        if prev_path.is_file():
+            prev, _ = load_profile(prev_path, expected_fingerprint=fp)
+            prev.table.update(profile.table)
+            prev.observe_peak(profile.peak())
+            profile = prev
     path = None
     if save:
-        path = save_profile(
-            profile, fp, directory=out,
-            meta={"grid": grid, "reps": reps, "wall_s": round(wall, 3)})
+        meta = {"grid": grid, "reps": reps, "wall_s": round(wall, 3)}
+        if expr is not None:
+            meta["expr"] = expr
+        path = save_profile(profile, fp, directory=out, meta=meta)
     return CalibrationResult(profile=profile, fingerprint=fp, path=path,
                              wall_s=wall, n_calls=len(profile.table))
 
@@ -163,7 +204,13 @@ def main(argv: Optional[List[str]] = None) -> int:
         prog="python -m repro.core.calibrate",
         description="Calibrate this machine's kernel performance profile.")
     ap.add_argument("--backend", choices=("blas", "jax"), default="blas")
-    ap.add_argument("--grid", choices=sorted(GRIDS), default="default")
+    ap.add_argument("--expr", default=None,
+                    help="calibrate only the kernel calls of one registered "
+                         "expression family (see `python -m repro.core.sweep "
+                         "--list-exprs`); --grid then names a sweep grid")
+    ap.add_argument("--grid", default="default",
+                    help=f"calibration grid {sorted(GRIDS)}, or with "
+                         "--expr a sweep grid (smoke/small/default/full)")
     ap.add_argument("--reps", type=int, default=3,
                     help="timing repetitions per kernel call")
     ap.add_argument("--out", type=Path, default=None,
@@ -181,7 +228,8 @@ def main(argv: Optional[List[str]] = None) -> int:
                   file=sys.stderr)
 
     res = calibrate(backend=args.backend, grid=args.grid, reps=args.reps,
-                    out=args.out, dtype=args.dtype, progress=progress)
+                    out=args.out, dtype=args.dtype, progress=progress,
+                    expr=args.expr)
     print(f"calibrated {res.n_calls} kernel shapes on "
           f"{res.fingerprint.backend}/{res.fingerprint.device}"
           f"/{res.fingerprint.dtype} in {res.wall_s:.1f}s "

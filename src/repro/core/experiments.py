@@ -19,10 +19,12 @@ Scaled-down defaults: the paper used boxes up to 1200 with 10–23k samples on
 a 10-core Xeon with MKL; the benchmarks here default to smaller boxes and
 sample counts to finish in CI time, with flags to run the full study.
 
-The expression specs (:data:`MATRIX_CHAIN_ABCD`, :data:`GRAM_AATB`),
-:class:`Instance` and :func:`measure_instance` live in
-:mod:`repro.core.sweep` and are re-exported here for backwards
-compatibility.
+The expression specs (:data:`MATRIX_CHAIN_ABCD`, :data:`GRAM_AATB` and
+the rest of the registry in :mod:`repro.core.expressions`),
+:class:`Instance` and :func:`measure_instance` are re-exported here for
+backwards compatibility; every harness takes *any* registered
+:class:`ExpressionSpec`, so the zoo families run through Experiments 1–3
+unchanged.
 """
 
 from __future__ import annotations
@@ -39,18 +41,22 @@ from .runners import BlasRunner
 from .sweep import (
     GRAM_AATB,
     MATRIX_CHAIN_ABCD,
+    REGISTRY,
     AnomalyAtlas,
     ExpressionSpec,
     Instance,
     benchmark_unique_calls,
     collect_unique_calls,
+    get_spec,
     measure_instance,
+    registered_names,
     sweep,
 )
 
 __all__ = [
     "ExpressionSpec", "Instance", "measure_instance",
-    "MATRIX_CHAIN_ABCD", "GRAM_AATB",
+    "MATRIX_CHAIN_ABCD", "GRAM_AATB", "REGISTRY", "get_spec",
+    "registered_names",
     "Experiment1Result", "Experiment2Result", "Experiment3Result",
     "experiment1_random_search", "experiment2_regions",
     "experiment3_predict_from_benchmarks",

@@ -4,10 +4,16 @@ These are the paper's §3.1 conventions, verbatim:
 
 * GEMM  (A: m×k, B: k×n)           → 2·m·n·k
 * SYRK  (A: m×k, computes A·Aᵀ)    → (m+1)·m·k
-* SYMM  (A: m×m symmetric, B: m×n) → 2·m²·n
+* SYMM  (S: m×m symmetric, B: m×n) → 2·m²·n
 * TRI2FULL (copy triangle to full m×m) → 0 FLOPs (pure data movement;
   the paper charges it no FLOPs, which is itself part of why FLOPs
   mislead — the copy costs time but not FLOPs).
+
+SYMM dims are always ``(s_dim, other_dim)`` regardless of which side the
+symmetric operand multiplies from (``S·B`` vs ``B·S`` cost the same
+2·s²·o FLOPs and share calibration-table entries); the side lives on the
+enumeration :class:`~repro.core.algorithms.Step` (``symm_side``), which
+is what executors consult.
 
 The counts are exposed both as python ints (for the selector) and as a
 per-call dataclass so the perf-model layer can attach time estimates.
@@ -17,6 +23,10 @@ from __future__ import annotations
 
 import dataclasses
 from typing import Tuple
+
+#: The kernel vocabulary of the enumeration layer. Profiles, runners and
+#: the calibration sweep all branch over exactly these kinds.
+KERNEL_KINDS: Tuple[str, ...] = ("gemm", "syrk", "symm", "tri2full")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,7 +88,8 @@ def kernel_flops(kind: str, dims: Tuple[int, ...]) -> int:
         return 2 * m * m * n
     if kind == "tri2full":
         return 0
-    raise ValueError(f"unknown kernel kind {kind!r}")
+    raise ValueError(
+        f"unknown kernel kind {kind!r}; expected one of {KERNEL_KINDS}")
 
 
 def gemm(m: int, n: int, k: int, *ops: str) -> KernelCall:

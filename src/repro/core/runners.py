@@ -61,6 +61,12 @@ def _blas_step(step: Step, fetch: Callable[[object], np.ndarray]) -> np.ndarray:
         # dsyrk computes one triangle of a·aᵀ (lower, given lower=1).
         return _blas.dsyrk(1.0, a, lower=1)
     if call.kind == "symm":
+        # The symmetric operand (read as its lower triangle) is lhs for
+        # side L and rhs for side R; dsymm(side=1) computes b·s.
+        if step.symm_side == "R":
+            s = fetch(step.rhs)
+            b = fetch(step.lhs)
+            return _blas.dsymm(1.0, s, b, side=1, lower=1)
         s = fetch(step.lhs)
         b = fetch(step.rhs)
         return _blas.dsymm(1.0, s, b, side=0, lower=1)
@@ -70,6 +76,53 @@ def _blas_step(step: Step, fetch: Callable[[object], np.ndarray]) -> np.ndarray:
             np.tril(t) + np.tril(t, -1).T
         )
     raise ValueError(call.kind)
+
+
+# ----------------------------------------------------- numpy reference ------
+
+
+def _mirror_lower(t: np.ndarray) -> np.ndarray:
+    return np.tril(t) + np.tril(t, -1).T
+
+
+def reference_execute(alg: Algorithm,
+                      operands: Dict[int, np.ndarray]) -> np.ndarray:
+    """Pure-numpy oracle executor for an algorithm's step sequence.
+
+    Semantically identical to :meth:`BlasRunner.execute` but with no
+    scipy dependency and no timing concerns — the numerical correctness
+    gate every registered expression's algorithms are checked against
+    (see tests/test_expressions.py). Honors triangle storage (SYRK output
+    keeps only the lower triangle; SYMM/TRI2FULL read only the lower
+    triangle of symmetric operands) and SYMM sides.
+    """
+    inter: Dict[int, np.ndarray] = {}
+
+    def fetch(ref: object) -> np.ndarray:
+        if isinstance(ref, Leaf):
+            a = np.asarray(operands[ref.base])
+            return a.T if ref.transposed else a
+        return inter[ref]
+
+    out = None
+    for step in alg.steps:
+        kind = step.call.kind
+        if kind == "gemm":
+            out = fetch(step.lhs) @ fetch(step.rhs)
+        elif kind == "syrk":
+            a = fetch(step.lhs)
+            out = np.tril(a @ a.T)
+        elif kind == "symm":
+            if step.symm_side == "R":
+                out = fetch(step.lhs) @ _mirror_lower(fetch(step.rhs))
+            else:
+                out = _mirror_lower(fetch(step.lhs)) @ fetch(step.rhs)
+        elif kind == "tri2full":
+            out = _mirror_lower(fetch(step.lhs))
+        else:
+            raise ValueError(kind)
+        inter[step.out] = out
+    return out
 
 
 class BlasRunner:
@@ -96,8 +149,13 @@ class BlasRunner:
                     # Underlying (untransposed) matrix shape.
                     r, c = (ref.cols, ref.rows) if ref.transposed else (
                         ref.rows, ref.cols)
-                    ops[ref.base] = np.asfortranarray(
-                        self.rng.standard_normal((r, c)))
+                    a = self.rng.standard_normal((r, c))
+                    if ref.symmetric:
+                        # SYMM-based algorithms read only a triangle; a
+                        # non-symmetric operand would make them disagree
+                        # with the GEMM-based ones.
+                        a = (a + a.T) / 2.0
+                    ops[ref.base] = np.asfortranarray(a)
         return ops
 
     def _fetcher(self, operands: Dict[int, np.ndarray],
@@ -219,6 +277,9 @@ class JaxRunner:
 
         use_pallas = self.use_pallas
 
+        def mirror(t):
+            return jnp.tril(t) + jnp.swapaxes(jnp.tril(t, -1), -1, -2)
+
         def fn(*inputs):
             inter: Dict[int, object] = {}
 
@@ -239,16 +300,24 @@ class JaxRunner:
                     out = (kops.syrk(a) if use_pallas
                            else jnp.tril(a @ jnp.swapaxes(a, -1, -2)))
                 elif c.kind == "symm":
-                    s, b = fetch(step.lhs), fetch(step.rhs)
-                    if use_pallas:
-                        out = kops.symm(s, b)
+                    if step.symm_side == "R":
+                        # B·S with S symmetric: (S·Bᵀ)ᵀ via the side-L
+                        # kernel, or mirror-and-matmul in plain jnp.
+                        b, s = fetch(step.lhs), fetch(step.rhs)
+                        if use_pallas:
+                            out = jnp.swapaxes(
+                                kops.symm(s, jnp.swapaxes(b, -1, -2)),
+                                -1, -2)
+                        else:
+                            out = b @ mirror(s)
                     else:
-                        full = jnp.tril(s) + jnp.swapaxes(
-                            jnp.tril(s, -1), -1, -2)
-                        out = full @ b
+                        s, b = fetch(step.lhs), fetch(step.rhs)
+                        if use_pallas:
+                            out = kops.symm(s, b)
+                        else:
+                            out = mirror(s) @ b
                 elif c.kind == "tri2full":
-                    t = fetch(step.lhs)
-                    out = jnp.tril(t) + jnp.swapaxes(jnp.tril(t, -1), -1, -2)
+                    out = mirror(fetch(step.lhs))
                 else:
                     raise ValueError(c.kind)
                 inter[step.out] = out
@@ -280,8 +349,12 @@ class JaxRunner:
                 if isinstance(ref, Leaf) and ref.base not in ops:
                     r, c = (ref.cols, ref.rows) if ref.transposed else (
                         ref.rows, ref.cols)
-                    a = jnp.asarray(self.rng.standard_normal((r, c)),
-                                    dtype=self.dtype)
+                    arr = self.rng.standard_normal((r, c))
+                    if ref.symmetric:
+                        # symmetric leaves must be symmetric (SYMM reads
+                        # only a triangle); mirrors BlasRunner.
+                        arr = (arr + arr.T) / 2.0
+                    a = jnp.asarray(arr, dtype=self.dtype)
                     if self.device is not None:
                         a = jax.device_put(a, self.device)
                     ops[ref.base] = a

@@ -131,3 +131,23 @@ def select(
         return rank_by_measurement(algos, runner)
     raise ValueError(
         f"unknown discriminant {discriminant!r}; expected {DISCRIMINANTS}")
+
+
+def select_expression(
+    expr: str,
+    point: Sequence[int],
+    discriminant: str = "perfmodel",
+    profile: Optional[KernelProfile] = None,
+    runner: Optional[BlasRunner] = None,
+    dtype_bytes: int = 2,
+) -> List[Algorithm]:
+    """Rank a *registered* expression family's algorithms at one instance.
+
+    ``expr`` is a registry CLI name (``abcd``, ``aatb``, ``abtb``, …, see
+    :mod:`repro.core.expressions`); enumeration and ranking both flow from
+    the registry entry, so newly registered families are selectable with
+    no further wiring.
+    """
+    from .expressions import get_spec
+    return select(get_spec(expr).algorithms(point), discriminant,
+                  profile=profile, runner=runner, dtype_bytes=dtype_bytes)

@@ -8,9 +8,11 @@ performance-modeling line, arXiv:1209.2364 / arXiv:1409.8602), which a serial
 Python loop cannot deliver at useful resolution. This module is the scaling
 layer:
 
-* :class:`GridSpec` / :data:`SWEEP_GRIDS` — named dim grids over an
-  expression family (``ABCD``, ``AAᵀB``, or any custom
-  :class:`ExpressionSpec`).
+* :class:`GridSpec` / :data:`SWEEP_GRIDS` (defined in
+  :mod:`repro.core.expressions`, re-exported here) — named dim grids over
+  any registered expression family: the paper's ``ABCD``/``AAᵀB`` plus the
+  zoo (``abcde``, ``abtb``, ``btsb``, ``atab``, ``abab``); ``--expr``
+  accepts every registry entry and ``--list-exprs`` prints them.
 * :func:`sweep` — the one measurement path. Shards the grid across workers:
   a process pool for the BLAS runner (kernel timing is GIL-bound and
   cache-sensitive, so isolation per process matches the paper's protocol),
@@ -46,7 +48,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import functools
-import itertools
 import json
 import os
 import re
@@ -56,9 +57,22 @@ from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, ThreadPoolE
 from pathlib import Path
 from typing import Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
-from .algorithms import Algorithm, Leaf, enumerate_algorithms
+from .algorithms import Algorithm, Leaf
 from .anomaly import Classification, Region, classify, cluster_regions, region_summary
-from .expr import Chain, gram_times, matrix_chain
+# Expression specs + grids live in repro.core.expressions; the
+# redundant-alias imports re-export them here for backwards compat
+# (pre-registry callers import them from repro.core.sweep).
+from .expressions import (
+    GRAM_AATB as GRAM_AATB,
+    MATRIX_CHAIN_ABCD as MATRIX_CHAIN_ABCD,
+    REGISTRY as REGISTRY,
+    SPECS as SPECS,
+    SWEEP_GRIDS as SWEEP_GRIDS,
+    ExpressionSpec as ExpressionSpec,
+    GridSpec as GridSpec,
+    get_spec as get_spec,
+    registered_names as registered_names,
+)
 from .flops import KernelCall
 from .perfmodel import KernelProfile, TableProfile, predict_algorithm_time
 from .profile_store import (
@@ -69,44 +83,6 @@ from .profile_store import (
     save_profile,
 )
 from .runners import BlasRunner, JaxRunner
-
-# ------------------------------------------------------- expression specs ---
-
-
-@dataclasses.dataclass(frozen=True)
-class ExpressionSpec:
-    """A family of instances: tuple of dims -> Chain.
-
-    ``build`` must be a module-level function (not a lambda/closure) so
-    specs pickle across the process-pool backend.
-    """
-
-    name: str
-    ndims: int
-    build: Callable[[Sequence[int]], Chain]
-
-    def algorithms(self, point: Sequence[int]) -> List[Algorithm]:
-        return enumerate_algorithms(self.build(tuple(int(x) for x in point)))
-
-
-def _build_abcd(dims: Sequence[int]) -> Chain:
-    return matrix_chain(*dims)
-
-
-def _build_aatb(dims: Sequence[int]) -> Chain:
-    return gram_times(*dims)
-
-
-MATRIX_CHAIN_ABCD = ExpressionSpec(name="ABCD", ndims=5, build=_build_abcd)
-
-GRAM_AATB = ExpressionSpec(name="AATB", ndims=3, build=_build_aatb)
-
-#: CLI-name -> spec. Custom specs can be registered here by embedding code.
-SPECS: Dict[str, ExpressionSpec] = {
-    "abcd": MATRIX_CHAIN_ABCD,
-    "aatb": GRAM_AATB,
-}
-
 
 # --------------------------------------------------- instance measurement ---
 
@@ -156,55 +132,6 @@ def measure_instance(
         flops[a.name] = a.flops
     cls = classify(times, flops, threshold=threshold)
     return Instance(tuple(int(x) for x in point), times, flops, cls)
-
-
-# ------------------------------------------------------------------ grids ---
-
-#: Named per-axis dim values; every axis of a grid uses the same values, so
-#: an n-dim spec swept at grid g covers len(g)**n instances.
-SWEEP_GRIDS: Dict[str, Tuple[int, ...]] = {
-    "smoke": (32, 64),
-    "small": (32, 64, 96, 128),
-    "default": tuple(range(64, 513, 64)),
-    "full": tuple(range(100, 1201, 100)),
-}
-
-
-@dataclasses.dataclass(frozen=True)
-class GridSpec:
-    """A rectilinear grid of instances: one sorted value axis per dim."""
-
-    name: str
-    axes: Tuple[Tuple[int, ...], ...]
-
-    def __post_init__(self):
-        for ax in self.axes:
-            if list(ax) != sorted(set(int(v) for v in ax)):
-                raise ValueError(f"grid axis must be sorted unique ints: {ax}")
-
-    @classmethod
-    def uniform(cls, values: Iterable[int], ndims: int,
-                name: str = "custom") -> "GridSpec":
-        vals = tuple(sorted(set(int(v) for v in values)))
-        return cls(name=name, axes=(vals,) * ndims)
-
-    @classmethod
-    def named(cls, name: str, ndims: int) -> "GridSpec":
-        if name not in SWEEP_GRIDS:
-            raise ValueError(
-                f"unknown grid {name!r}; expected {sorted(SWEEP_GRIDS)}")
-        return cls.uniform(SWEEP_GRIDS[name], ndims, name=name)
-
-    @property
-    def n_points(self) -> int:
-        out = 1
-        for ax in self.axes:
-            out *= len(ax)
-        return out
-
-    def points(self) -> List[Tuple[int, ...]]:
-        """All grid points in deterministic row-major order."""
-        return [tuple(p) for p in itertools.product(*self.axes)]
 
 
 # ------------------------------------------------------------------ atlas ---
@@ -604,6 +531,11 @@ def sweep(
             f"'process', or reps/use_pallas/dtype for 'jax') — refusing to "
             f"silently measure with a different configuration")
     want = list(dict.fromkeys(tuple(int(x) for x in p) for p in points))
+    for p in want:
+        if len(p) != spec.ndims:
+            raise ValueError(
+                f"point {p} has {len(p)} dims but expression {spec.name} "
+                f"takes {spec.ndims} — check the grid's ndims")
     cached: Dict[Tuple[int, ...], Instance] = {}
     todo: List[Tuple[int, ...]] = []
     for p in want:
@@ -786,16 +718,32 @@ def _note(msg: str, quiet: bool) -> None:
         sys.stderr.flush()
 
 
+def _registry_epilog() -> str:
+    lines = ["registered expression families (repro.core.expressions):"]
+    for cli_name in registered_names():
+        s = REGISTRY[cli_name]
+        lines.append(f"  {cli_name:<7} {s.name:<6} ndims={s.ndims}  "
+                     f"{s.description}")
+    return "\n".join(lines)
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.core.sweep",
         description="Sharded anomaly sweep over a problem-size grid; "
-                    "results persist in the resumable anomaly atlas.")
-    ap.add_argument("--expr", choices=sorted(SPECS), default="aatb",
-                    help="expression family to sweep")
+                    "results persist in the resumable anomaly atlas.",
+        epilog=_registry_epilog(),
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--expr", choices=registered_names(), default="aatb",
+                    help="expression family to sweep (see the registry "
+                         "listing below)")
+    ap.add_argument("--list-exprs", action="store_true",
+                    help="print the registered expression families (one "
+                         "CLI name per line) and exit")
     ap.add_argument("--grid", default="small",
-                    help=f"named grid {sorted(SWEEP_GRIDS)} or "
-                         "comma-separated axis values, e.g. 64,128,256")
+                    help=f"named grid {sorted(SWEEP_GRIDS)} (per-family "
+                         "axis overrides apply) or comma-separated axis "
+                         "values, e.g. 64,128,256")
     ap.add_argument("--mode", choices=("measure", "predict"),
                     default="measure",
                     help="measure: time every algorithm per instance; "
@@ -823,9 +771,14 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
 
-    spec = SPECS[args.expr]
-    if args.grid in SWEEP_GRIDS:
-        grid = GridSpec.named(args.grid, spec.ndims)
+    if args.list_exprs:
+        for cli_name in registered_names():
+            print(cli_name)
+        return 0
+
+    spec = get_spec(args.expr)
+    if args.grid in SWEEP_GRIDS or args.grid in spec.grids:
+        grid = spec.grid(args.grid)
     else:
         try:
             values = [int(v) for v in args.grid.split(",") if v.strip()]

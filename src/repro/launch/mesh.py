@@ -30,6 +30,19 @@ def _make_mesh(shape, axes):
     return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
+def set_mesh(mesh):
+    """Enter ``mesh`` as the ambient mesh, portable across jax versions.
+
+    ``jax.set_mesh`` landed after jax 0.4.x; on older jax the Mesh object
+    itself is the context manager that establishes the ambient mesh for
+    sharding constraints. Use this everywhere instead of ``jax.set_mesh``
+    (same class of gate as the ``AxisType`` import above).
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

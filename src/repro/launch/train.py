@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.configs import SHAPES, get, get_smoke, normalize
 from repro.data.pipeline import SyntheticLM
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, set_mesh
 from repro.runtime.supervisor import RestartPolicy, Supervisor
 from repro.sharding.context import activation_sharding
 from repro.train import loop as train_loop
@@ -53,7 +53,7 @@ def main(argv=None) -> int:
                          extra_specs=extra)
 
     def run(attempt: int):
-        with jax.set_mesh(mesh), activation_sharding(mesh):
+        with set_mesh(mesh), activation_sharding(mesh):
             return train_loop.train(
                 cfg, source, args.steps, ckpt_dir=args.ckpt,
                 optimizer=args.optimizer, peak_lr=args.lr, mesh=mesh)

@@ -339,9 +339,13 @@ def apply_decode(params: Params, cfg: AttnConfig, x: jax.Array,
     group = cfg.n_heads // cfg.n_kv_heads
     scale = cfg.query_pre_scale or cfg.head_dim ** -0.5
 
+    # The cache quantizes *storage* only (bf16 k/v): the contraction runs
+    # at activation precision. Downcasting the fresh q or the softmax
+    # probabilities to the cache dtype would double the quantization error
+    # and drift decode logits away from the teacher-forced forward pass.
     kq = jnp.repeat(new_k, group, axis=2)   # (B, max_s, H, Dh)
     vq = jnp.repeat(new_v, group, axis=2)
-    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(kq.dtype), kq,
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kq.astype(q.dtype),
                         preferred_element_type=jnp.float32) * scale
     logits = softcap(logits, cfg.logit_softcap)
     kpos = jnp.arange(max_s)
@@ -349,8 +353,8 @@ def apply_decode(params: Params, cfg: AttnConfig, x: jax.Array,
     if cfg.window > 0:
         mask &= kpos[None, :] > idx - cfg.window
     logits = jnp.where(mask[None, None], logits, -1e30)
-    p = jax.nn.softmax(logits, axis=-1).astype(vq.dtype)
-    out = jnp.einsum("bhqk,bkhd->bqhd", p, vq)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vq.astype(p.dtype))
     out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
     return dense(params["wo"], out.astype(x.dtype)), KVCache(
         new_k, new_v, idx + 1)

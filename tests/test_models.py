@@ -72,7 +72,15 @@ def test_smoke_decode_steps(arch):
 
 @pytest.mark.parametrize("arch", ["glm4_9b", "gemma2_9b", "mamba2_370m"])
 def test_decode_matches_teacher_forced_forward(arch):
-    """Token-by-token decode logits == full forward logits (same prefix)."""
+    """Token-by-token decode logits == full forward logits (same prefix).
+
+    Decode attention computes at activation precision (fp32 here); the
+    only difference from the teacher-forced forward is that k/v pass
+    through bf16 KV-cache *storage* (~0.4 % relative rounding per
+    element). The 2e-2 tolerance covers that storage quantization after
+    it compounds through the layer stack and the LM head — with an fp32
+    cache the two paths agree to ~1e-6.
+    """
     cfg = get_smoke(arch)
     params, _ = api.init(KEY, cfg)
     b, s = 1, 8

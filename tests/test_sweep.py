@@ -12,6 +12,7 @@ from repro.core.profile_store import HardwareFingerprint
 from repro.core.perfmodel import AnalyticalTPUProfile, TableProfile
 from repro.core.sweep import (
     GRAM_AATB,
+    REGISTRY,
     SWEEP_GRIDS,
     AnomalyAtlas,
     AtlasError,
@@ -106,6 +107,24 @@ def test_sweep_result_preserves_requested_order(tmp_path):
     pts = list(reversed(GRID.points()))
     res = sweep(GRAM_AATB, pts, runner=DeterministicRunner())
     assert [r.point for r in res.records] == pts
+
+
+@pytest.mark.parametrize("expr", sorted(REGISTRY))
+def test_every_registered_expression_sweeps_and_resumes(expr, tmp_path):
+    """Registry gate: a family that breaks sweeping (mis-shaped grid,
+    enumeration error, unserializable spec) must fail here, not in a
+    user's overnight run. Measure the smoke grid, then resume: 0 new."""
+    spec = REGISTRY[expr]
+    grid = spec.grid("smoke")
+    path = tmp_path / f"{expr}.jsonl"
+    atlas = AnomalyAtlas(path, FP, spec.name, 0.10)
+    res = sweep(spec, grid.points(), runner=DeterministicRunner(),
+                atlas=atlas)
+    assert res.n_measured == grid.n_points and res.n_skipped == 0
+    atlas2 = AnomalyAtlas(path, FP, spec.name, 0.10)
+    res2 = sweep(spec, grid.points(), runner=DeterministicRunner(),
+                 atlas=atlas2)
+    assert res2.n_measured == 0 and res2.n_skipped == grid.n_points
 
 
 # ------------------------------------------------------------ resumability --
