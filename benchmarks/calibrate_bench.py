@@ -50,7 +50,25 @@ def main() -> None:
     emit("calibrate_cache_load", load_s * 1e6,
          f"speedup_x={sweep_s / max(load_s, 1e-9):.0f}")
 
-    # 3. discriminant agreement on a spread of AAᵀB instances
+    # 3. nearest-neighbour lookup cost during ranking: off-grid queries
+    # force the per-(kind, ndims) bucket index path on every call (the
+    # pre-index linear scan walked the whole table per un-memoised call).
+    queries = [("gemm", (m + 1, n + 3, k + 5))
+               for m in GRIDS[grid] for n in GRIDS[grid]
+               for k in GRIDS[grid]]
+    from repro.core import gemm as gemm_call
+    t0 = time.perf_counter()
+    reps_nn = 20
+    for _ in range(reps_nn):
+        for _, dims in queries:
+            cached.time(gemm_call(*dims))
+    nn_us = (time.perf_counter() - t0) / (reps_nn * len(queries)) * 1e6
+    note(f"nearest-neighbour query: {nn_us:.2f}us/call "
+         f"({len(cached.table)} table entries, bucket index)")
+    emit("calibrate_nearest_query", nn_us,
+         f"entries={len(cached.table)};queries={len(queries)}")
+
+    # 4. discriminant agreement on a spread of AAᵀB instances
     points = [(300, 200, 100), (600, 80, 400), (120, 500, 90),
               (256, 256, 256)]
     if FULL:

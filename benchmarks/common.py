@@ -20,15 +20,28 @@ FULL = os.environ.get("REPRO_BENCH_SCALE", "ci") == "full"
 #: experiment benchmarks out over a process pool; 1 = serial).
 SHARDS = max(1, int(os.environ.get("REPRO_SWEEP_SHARDS", "1")))
 
+#: Execution backend the experiment benchmarks measure on — any
+#: repro.core.backends registry key (REPRO_EXEC_BACKEND=jax reruns the
+#: paper pipeline on XLA; default is the paper's BLAS protocol). The
+#: benchmarks are thin configs over this name.
+EXEC_BACKEND = os.environ.get("REPRO_EXEC_BACKEND", "blas")
+
+
+def make_runner(reps: int, **opts):
+    """The configured execution backend, CLI-leniently constructed."""
+    from repro.core.backends import make_backend
+    return make_backend(EXEC_BACKEND, reps=reps, **opts)
+
 
 def engine_kwargs(reps: int) -> dict:
     """Sweep-engine fan-out shared by every experiment benchmark."""
     if SHARDS > 1:
-        from repro.core.runners import BlasRunner
+        from repro.core.backends import make_backend
         return {
             "backend": "process",
             "shards": SHARDS,
-            "runner_factory": functools.partial(BlasRunner, reps=reps),
+            "runner_factory": functools.partial(make_backend, EXEC_BACKEND,
+                                                reps=reps),
         }
     return {}
 
@@ -37,13 +50,16 @@ def open_atlas(spec_name: str, threshold: float):
     """The persistent atlas the experiment benchmarks stream into.
 
     Uses the default atlas directory ($REPRO_ATLAS_DIR or the shared
-    cache), keyed by this machine's BLAS fingerprint — repeat benchmark
-    runs resume from it instead of re-measuring.
+    cache), keyed by the configured execution backend's fingerprint —
+    repeat benchmark runs resume from it instead of re-measuring, and
+    each backend's ground truth stays in its own atlas.
     """
     from repro.core import AnomalyAtlas
+    from repro.core.backends import backend_default_dtype
     from repro.core.profile_store import current_fingerprint
-    return AnomalyAtlas.open(spec_name, current_fingerprint(),
-                             threshold=threshold)
+    fp = current_fingerprint(backend=EXEC_BACKEND,
+                             dtype=backend_default_dtype(EXEC_BACKEND))
+    return AnomalyAtlas.open(spec_name, fp, threshold=threshold)
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

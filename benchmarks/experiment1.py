@@ -17,11 +17,10 @@ import numpy as np
 from repro.core import (
     GRAM_AATB,
     MATRIX_CHAIN_ABCD,
-    BlasRunner,
     experiment1_random_search,
 )
 
-from .common import FULL, emit, engine_kwargs, note, open_atlas
+from .common import FULL, emit, engine_kwargs, make_runner, note, open_atlas
 
 
 def run_spec(spec, box, n_anom, max_samples, reps, threshold=0.10,
@@ -29,7 +28,7 @@ def run_spec(spec, box, n_anom, max_samples, reps, threshold=0.10,
     # Sharded runs build per-worker runners from engine_kwargs' factory;
     # the (64 MB flush buffer) serial runner exists only when used.
     kwargs = engine_kwargs(reps)
-    runner = None if kwargs else BlasRunner(reps=reps)
+    runner = None if kwargs else make_runner(reps)
     with open_atlas(spec.name, threshold) as atlas:
         n_cached = len(atlas)
         res = experiment1_random_search(

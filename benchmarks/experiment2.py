@@ -17,16 +17,15 @@ import numpy as np
 from repro.core import (
     GRAM_AATB,
     MATRIX_CHAIN_ABCD,
-    BlasRunner,
     experiment1_random_search,
     experiment2_regions,
 )
 
-from .common import FULL, emit, engine_kwargs, note, open_atlas
+from .common import FULL, emit, engine_kwargs, make_runner, note, open_atlas
 
 
 def run_spec(spec, box, n_seeds, reps):
-    runner = BlasRunner(reps=reps)  # used by the serial probes below
+    runner = make_runner(reps)  # used by the serial probes below
     kwargs = engine_kwargs(reps)
     with open_atlas(spec.name, 0.10) as seed_atlas:
         seeds = experiment1_random_search(

@@ -18,7 +18,6 @@ from __future__ import annotations
 from repro.core import (
     GRAM_AATB,
     MATRIX_CHAIN_ABCD,
-    BlasRunner,
     current_fingerprint,
     experiment1_random_search,
     experiment2_regions,
@@ -27,11 +26,11 @@ from repro.core import (
     save_profile,
 )
 
-from .common import FULL, emit, engine_kwargs, note, open_atlas
+from .common import FULL, emit, engine_kwargs, make_runner, note, open_atlas
 
 
 def run_spec(spec, box, n_seeds, reps):
-    runner = BlasRunner(reps=reps)  # used by the serial probes below
+    runner = make_runner(reps)  # used by the serial probes below
     kwargs = engine_kwargs(reps)
     with open_atlas(spec.name, 0.10) as seed_atlas:
         seeds = experiment1_random_search(
@@ -47,11 +46,14 @@ def run_spec(spec, box, n_seeds, reps):
                                       box=box, threshold=0.05, atlas=atlas)
     # Seed from the machine's persisted calibration (only unmeasured calls
     # are benchmarked, deduplicated across all instances), then persist the
-    # enriched table back.
-    cached = load_default_profile()
+    # enriched table back — under the configured backend's fingerprint, so
+    # REPRO_EXEC_BACKEND=jax timings never pollute the BLAS calibration.
+    backend, dtype = runner.fingerprint_tags()
+    cached = load_default_profile(backend=backend, dtype=dtype)
     res = experiment3_predict_from_benchmarks(
         spec, runner, regions.classified, threshold=0.05, profile=cached)
-    save_profile(res.profile, current_fingerprint(),
+    save_profile(res.profile, current_fingerprint(backend=backend,
+                                                  dtype=dtype),
                  meta={"source": f"experiment3:{spec.name}"})
     note(f"\n== Experiment 3: {spec.name} ==")
     note(f"(kernel calls: {res.n_calls_reused} reused from the "

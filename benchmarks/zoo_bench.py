@@ -17,11 +17,10 @@ REPRO_BENCH_SCALE=full sweeps the `small` grid instead of `smoke`.
 
 from __future__ import annotations
 
-from repro.core import BlasRunner
 from repro.core.expressions import REGISTRY
 from repro.core.sweep import collect_unique_calls, sweep
 
-from .common import FULL, emit, note, open_atlas, time_call
+from .common import FULL, emit, make_runner, note, open_atlas, time_call
 
 
 def main():
@@ -38,7 +37,9 @@ def main():
         n_algos = len(spec.algorithms(mid))
         enum_s = time_call(lambda: spec.algorithms(mid), reps=5)
         ucalls = len(collect_unique_calls(spec, grid.points()))
-        runner = BlasRunner(reps=reps, flush_cache=False)
+        # the configured backend: its timings must land in the atlas
+        # open_atlas keys under that backend's fingerprint
+        runner = make_runner(reps, flush_cache=False)
         with open_atlas(spec.name, 0.10) as atlas:
             res = sweep(spec, grid.points(), runner=runner, atlas=atlas)
         note(f"{cli_name:<7} {n_algos:>5} {ucalls:>8} "

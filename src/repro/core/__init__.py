@@ -13,6 +13,13 @@ from .algorithms import (
     enumerate_algorithms,
     optimal_chain_order,
 )
+from .backends import (
+    ExecutionBackend,
+    get_backend,
+    make_backend,
+    register_backend,
+    registered_backends,
+)
 from .anomaly import (
     Classification,
     ConfusionMatrix,
@@ -92,6 +99,9 @@ _LAZY_EXPORTS = {
     "SWEEP_GRIDS": ".expressions",
     "AnomalyAtlas": ".sweep",
     "AtlasError": ".sweep",
+    "BackendComparison": ".sweep",
+    "BackendDisagreement": ".sweep",
+    "compare_backends": ".sweep",
     "Instance": ".sweep",
     "SweepResult": ".sweep",
     "atlas_path": ".sweep",
@@ -122,6 +132,9 @@ def __getattr__(name):
 
 __all__ = [
     "Algorithm", "enumerate_algorithms", "optimal_chain_order",
+    "ExecutionBackend", "get_backend", "make_backend", "register_backend",
+    "registered_backends",
+    "BackendComparison", "BackendDisagreement", "compare_backends",
     "Classification", "ConfusionMatrix", "Region", "classify",
     "cluster_regions", "scan_line",
     "SWEEP_GRIDS", "AnomalyAtlas", "AtlasError", "GridSpec", "Instance",

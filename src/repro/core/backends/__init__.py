@@ -1,0 +1,55 @@
+"""repro.core.backends — one executor stack for BLAS, numpy, XLA, Pallas.
+
+The pluggable execution-backend registry (ISSUE 4). Four entries ship:
+
+=========  =====================================================  =========
+registry   what it executes                                       fingerprint
+key                                                               dtype
+=========  =====================================================  =========
+``blas``   scipy BLAS (paper protocol: cache flush, median-of-k)  float64
+``numpy``  the pure-numpy oracle (correctness ground truth)       float64
+``jax``    jnp under jit (XLA)                                    float32
+``pallas`` the Pallas TPU kernels (interpret mode on CPU)         float32
+=========  =====================================================  =========
+
+Every entry satisfies the :class:`~repro.core.backends.base
+.ExecutionBackend` protocol (``make_operands`` / ``execute`` / ``build``
+/ ``time_algorithm`` / ``benchmark_call`` / ``fingerprint_tags``) on top
+of the single generic step walker in :mod:`repro.core.backends.base`;
+``calibrate --backend``, ``sweep --backend``/``--compare-backends``,
+``selector`` and the planner all resolve executors here. Registering a
+fifth backend is ~30 lines — see docs/architecture.md.
+"""
+
+from .base import (
+    ExecutionBackend,
+    KernelOps,
+    backend_default_dtype,
+    backend_shard_mode,
+    get_backend,
+    get_backend_class,
+    make_backend,
+    measure_seconds,
+    num_inputs,
+    register_backend,
+    registered_backends,
+    synthetic_algorithm,
+    walk_steps,
+)
+from .blas import BlasBackend, CacheFlusher
+from .jax_backend import JaxBackend, PallasBackend
+from .numpy_backend import NumpyBackend, reference_execute
+
+register_backend("blas", BlasBackend)
+register_backend("numpy", NumpyBackend)
+register_backend("jax", JaxBackend)
+register_backend("pallas", PallasBackend)
+
+__all__ = [
+    "ExecutionBackend", "KernelOps", "walk_steps", "synthetic_algorithm",
+    "num_inputs", "measure_seconds",
+    "register_backend", "get_backend", "get_backend_class", "make_backend",
+    "registered_backends", "backend_default_dtype", "backend_shard_mode",
+    "BlasBackend", "NumpyBackend", "JaxBackend", "PallasBackend",
+    "CacheFlusher", "reference_execute",
+]

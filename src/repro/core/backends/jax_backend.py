@@ -1,0 +1,225 @@
+"""The ``jax`` and ``pallas`` backends: jit-able executors + vmap batching.
+
+``jax`` lowers every kernel kind to plain jnp (XLA picks the fusion);
+``pallas`` routes gemm/syrk/symm through the hand-written Pallas TPU
+kernels in :mod:`repro.kernels` (Mosaic on TPU, interpret mode on CPU —
+the two must agree, which tests/test_kernels.py and the backend-parity
+gate assert). Both share the generic walker, so an algorithm's step DAG
+is traced once and jit/vmap treat it like any other jnp program.
+
+The batched path (:meth:`JaxBackend.build_batched` /
+:meth:`execute_batch`) vmaps the built callable over a leading instance
+axis — the many-instance serving shape: one algorithm, a batch of
+operand sets, one device dispatch instead of ``batch`` of them.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from ..algorithms import Algorithm
+from .base import ExecutionBackend, KernelOps, num_inputs
+
+
+def _swap(a):
+    import jax.numpy as jnp
+    return jnp.swapaxes(a, -1, -2)
+
+
+def _mirror(t):
+    import jax.numpy as jnp
+    return jnp.tril(t) + _swap(jnp.tril(t, -1))
+
+
+class JnpOps(KernelOps):
+    """Plain-jnp kernel vocabulary (batch-dim friendly: last-two-axes ops)."""
+
+    def transpose(self, a):
+        return _swap(a)
+
+    def gemm(self, a, b):
+        return a @ b
+
+    def syrk(self, a):
+        import jax.numpy as jnp
+        return jnp.tril(a @ _swap(a))
+
+    def symm(self, s, b):
+        return _mirror(s) @ b
+
+    def symm_r(self, b, s):
+        return b @ _mirror(s)
+
+    def tri2full(self, t):
+        return _mirror(t)
+
+
+class PallasOps(JnpOps):
+    """Pallas TPU kernels for the compute kinds; jnp for data movement.
+
+    ``tri2full`` stays jnp on purpose: it is pure data movement and XLA's
+    fused tril/transpose is already bandwidth-bound (see
+    :func:`repro.kernels.ops.tri2full`).
+    """
+
+    def gemm(self, a, b):
+        from repro.kernels import ops as kops
+        return kops.gemm(a, b)
+
+    def syrk(self, a):
+        from repro.kernels import ops as kops
+        return kops.syrk(a)
+
+    def symm(self, s, b):
+        from repro.kernels import ops as kops
+        return kops.symm(s, b)
+
+    def symm_r(self, b, s):
+        from repro.kernels import ops as kops
+        # B·S with S symmetric: (S·Bᵀ)ᵀ via the side-L kernel.
+        return _swap(kops.symm(s, _swap(b)))
+
+
+_JNP_OPS = JnpOps()
+_PALLAS_OPS = PallasOps()
+
+
+class JaxBackend(ExecutionBackend):
+    """Build/execute/time algorithms as jitted JAX callables.
+
+    ``device`` pins every operand this backend synthesizes (and therefore
+    the computation, which follows its inputs) to one JAX device — the
+    sweep engine constructs one backend per device to shard a grid across
+    all of them. ``None`` leaves placement to JAX's default.
+
+    ``use_pallas=True`` makes this instance behave as the ``pallas``
+    backend (kernel ops and fingerprint tag included) — kept so the
+    legacy ``JaxRunner(use_pallas=...)`` constructor keeps working; new
+    code asks the registry for ``"pallas"`` instead.
+    """
+
+    name = "jax"
+    default_dtype = "float32"
+    dtypes = None  # any dtype label jax can represent
+    shard_mode = "device"
+
+    def __init__(self, device=None, reps: int = 3,
+                 dtype: Optional[str] = None,
+                 rng: Optional[np.random.Generator] = None,
+                 use_pallas: bool = False):
+        super().__init__(reps=reps, dtype=dtype, rng=rng)
+        self.device = device
+        self.use_pallas = bool(use_pallas)
+
+    # -- hooks -------------------------------------------------------------
+    def ops(self) -> KernelOps:
+        return _PALLAS_OPS if self.use_pallas else _JNP_OPS
+
+    def fingerprint_tags(self):
+        return ("pallas" if self.use_pallas else "jax", self.dtype)
+
+    def _asarray(self, a: np.ndarray):
+        import jax
+        import jax.numpy as jnp
+
+        out = jnp.asarray(a, dtype=self.dtype)
+        if out.dtype != jnp.dtype(self.dtype):
+            # e.g. float64 requested with jax_enable_x64 off: JAX silently
+            # downcasts, which would stamp a fingerprint the measurements
+            # don't match.
+            raise ValueError(
+                f"jax produced dtype {out.dtype} for requested "
+                f"{self.dtype!r} (for float64, enable jax_enable_x64)")
+        if self.device is not None:
+            out = jax.device_put(out, self.device)
+        return out
+
+    def _sync(self, out):
+        import jax
+        return jax.block_until_ready(out)
+
+    def _timed_callable(self, alg: Algorithm,
+                        operands: Dict[int, object]) -> Callable[[], object]:
+        """Jit the built callable; compile time lands in the warm-up call.
+
+        There is no cache flush on this backend — operands live in HBM
+        and the measured quantity is steady-state device time, not the
+        paper's cold-cache CPU protocol.
+        """
+        import jax
+
+        args = self._args(alg, operands)
+        fn = jax.jit(self.build(alg))
+        return lambda: fn(*args)
+
+    def _args(self, alg: Algorithm, operands: Dict[int, object]) -> list:
+        n = num_inputs(alg)
+        some = next(iter(operands.values()))
+        # fetch only ever reads base positions; fill the rest with any array
+        return [operands.get(i, some) for i in range(n)]
+
+    # -- batched (vmap) execution -----------------------------------------
+    def make_batched_operands(self, alg: Algorithm,
+                              batch: int) -> Dict[int, object]:
+        """``batch`` independent operand sets, stacked on a leading axis."""
+        return self.make_operands(alg, leading=(batch,))
+
+    def build_batched(self, alg: Algorithm) -> Callable:
+        """vmap of :meth:`build` over a leading instance axis on every leaf.
+
+        One dispatch evaluates the algorithm for a whole batch of operand
+        sets — the serving-sweep shape, where thousands of small instances
+        would otherwise pay per-call dispatch each.
+        """
+        import jax
+        return jax.vmap(self.build(alg))
+
+    def execute_batch(self, alg: Algorithm,
+                      operands: Dict[int, object]):
+        """Evaluate ``alg`` over batched operands (one jitted vmap call)."""
+        import jax
+        fn = jax.jit(self.build_batched(alg))
+        return fn(*self._args(alg, operands))
+
+    def time_algorithm_batched(self, alg: Algorithm, batch: int = 32,
+                               operands: Optional[Dict[int, object]] = None,
+                               reps: Optional[int] = None) -> float:
+        """Median wall seconds for one *batched* evaluation of ``alg``.
+
+        Divide by ``batch`` for per-instance amortized time; contrast with
+        ``batch ×`` :meth:`time_algorithm` to see the dispatch amortization
+        the vmap path buys.
+        """
+        import jax
+        import time as _t
+
+        if operands is None:
+            operands = self.make_batched_operands(alg, batch)
+        args = self._args(alg, operands)
+        fn = jax.jit(self.build_batched(alg))
+        self._sync(fn(*args))  # warm-up: compile + page-in
+        ts = []
+        for _ in range(reps if reps is not None else self.reps):
+            t0 = _t.perf_counter()
+            self._sync(fn(*args))
+            ts.append(_t.perf_counter() - t0)
+        return float(np.median(ts))
+
+
+class PallasBackend(JaxBackend):
+    """The ``pallas`` registry entry: Pallas kernels as a first-class backend.
+
+    Interpret mode on CPU, Mosaic on TPU — same call sites either way
+    (see :mod:`repro.kernels.ops`).
+    """
+
+    name = "pallas"
+
+    def __init__(self, device=None, reps: int = 3,
+                 dtype: Optional[str] = None,
+                 rng: Optional[np.random.Generator] = None,
+                 use_pallas: bool = True):
+        super().__init__(device=device, reps=reps, dtype=dtype, rng=rng,
+                         use_pallas=use_pallas)

@@ -1,0 +1,85 @@
+"""The ``numpy`` backend: the pure-numpy oracle, promoted to first class.
+
+Semantically identical to the BLAS backend but with no scipy dependency —
+``@``/``tril`` only. It is the ground truth every other backend's
+numerics are gated against (tests/test_expressions.py), and as a timing
+backend it measures what numpy's own matmul dispatch does with the same
+step DAGs (its anomaly regions are *not* the paper's BLAS regions — that
+difference is exactly what ``sweep --compare-backends`` reports).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..algorithms import Algorithm
+from .base import ExecutionBackend, KernelOps, walk_steps
+from .blas import CacheFlusher
+
+
+def _mirror_lower(t: np.ndarray) -> np.ndarray:
+    return np.tril(t) + np.tril(t, -1).T
+
+
+class NumpyOps(KernelOps):
+    """numpy kernel vocabulary honoring triangle storage."""
+
+    def transpose(self, a):
+        return a.T
+
+    def gemm(self, a, b):
+        return a @ b
+
+    def syrk(self, a):
+        return np.tril(a @ a.T)
+
+    def symm(self, s, b):
+        return _mirror_lower(s) @ b
+
+    def symm_r(self, b, s):
+        return b @ _mirror_lower(s)
+
+    def tri2full(self, t):
+        return _mirror_lower(t)
+
+
+_OPS = NumpyOps()
+
+
+class NumpyBackend(ExecutionBackend):
+    """The oracle executor (and a measurable backend in its own right)."""
+
+    name = "numpy"
+    default_dtype = "float64"
+    dtypes = ("float64",)
+    shard_mode = "process"
+
+    def __init__(self, reps: int = 10, flush_cache: bool = True,
+                 rng: Optional[np.random.Generator] = None,
+                 dtype: Optional[str] = None):
+        super().__init__(reps=reps, dtype=dtype, rng=rng)
+        self.flusher = CacheFlusher() if flush_cache else None
+
+    def ops(self) -> KernelOps:
+        return _OPS
+
+    def _pre_rep(self) -> None:
+        if self.flusher:
+            self.flusher.flush()
+
+
+def reference_execute(alg: Algorithm,
+                      operands: Dict[int, np.ndarray]) -> np.ndarray:
+    """Stateless oracle executor for an algorithm's step sequence.
+
+    The numerical correctness gate every registered expression's
+    algorithms — on every registered backend — are checked against.
+    Honors triangle storage (SYRK output keeps only the lower triangle;
+    SYMM/TRI2FULL read only the lower triangle of symmetric operands)
+    and SYMM sides. Equivalent to ``NumpyBackend().execute`` but with no
+    instance to construct.
+    """
+    return walk_steps(alg.steps,
+                      lambda base: np.asarray(operands[base]), _OPS)

@@ -3,15 +3,18 @@
 The paper's conclusion — FLOPs alone mispredict; combine them with kernel
 performance models — needs those models to exist for *this* hardware.
 :func:`calibrate` sweeps the kernel space (gemm/syrk/symm over a
-log-spaced dim grid, plus tri2full) with either runner backend, builds a
-measured :class:`~repro.core.perfmodel.TableProfile`, and persists it via
-:mod:`repro.core.profile_store` so the cost is paid once per machine:
-subsequent processes auto-load it through ``default_planner()``.
+log-spaced dim grid, plus tri2full) with any registered execution backend
+(:mod:`repro.core.backends` — the registry key is the profile fingerprint
+key), builds a measured :class:`~repro.core.perfmodel.TableProfile`, and
+persists it via :mod:`repro.core.profile_store` so the cost is paid once
+per machine: subsequent processes auto-load it through
+``default_planner()``.
 
 CLI::
 
     PYTHONPATH=src python -m repro.core.calibrate --grid small --out DIR
     PYTHONPATH=src python -m repro.core.calibrate --backend jax --grid default
+    PYTHONPATH=src python -m repro.core.calibrate --backend pallas --grid small
 
 Grids are named (small/default/full) rather than free-form so cache files
 produced on different machines cover comparable shape ranges.
@@ -26,6 +29,7 @@ import time
 from pathlib import Path
 from typing import Iterable, List, Optional
 
+from .backends import backend_default_dtype, make_backend, registered_backends
 from .flops import KernelCall, gemm, symm, syrk, tri2full
 from .perfmodel import TableProfile
 from .profile_store import (
@@ -33,7 +37,6 @@ from .profile_store import (
     current_fingerprint,
     save_profile,
 )
-from .runners import BlasRunner, JaxRunner
 
 # Log-spaced (power-of-two) dim grids. "small" finishes in seconds and is
 # meant for tests/smoke; "default" is the per-machine calibration;
@@ -103,24 +106,28 @@ def sweep_kernels(
     """Benchmark every grid call in isolation; returns the measured table.
 
     ``runner`` is any object with ``benchmark_call(call, reps=None) ->
-    float`` (both :class:`BlasRunner` and :class:`JaxRunner` qualify).
-    ``dtype`` is forwarded only to :class:`JaxRunner` (BLAS is always
-    float64; other runners keep the documented two-arg contract). Peak
-    FLOP/s is estimated as the best throughput observed anywhere in the
-    sweep, so ``TableProfile.efficiency`` is relative to this machine's
-    own best. ``calls`` overrides the measured set (e.g. one expression
-    family's deduplicated calls from :func:`expression_calls`); ``grid``
-    is ignored then.
+    float`` — every registered :class:`~repro.core.backends
+    .ExecutionBackend` qualifies, and dtype/device/flush protocol live on
+    the runner instance (one signature across backends). ``dtype`` is a
+    consistency guard only: if the runner declares a dtype, a mismatch
+    raises rather than stamping a fingerprint the measurements don't
+    match. Peak FLOP/s is estimated as the best throughput observed
+    anywhere in the sweep, so ``TableProfile.efficiency`` is relative to
+    this machine's own best. ``calls`` overrides the measured set (e.g.
+    one expression family's deduplicated calls from
+    :func:`expression_calls`); ``grid`` is ignored then.
     """
+    runner_dtype = getattr(runner, "dtype", None)
+    if dtype is not None and runner_dtype is not None \
+            and runner_dtype != dtype:
+        raise ValueError(
+            f"runner measures dtype {runner_dtype!r} but the sweep was "
+            f"asked to label {dtype!r}")
     calls = grid_calls(grid) if calls is None else list(calls)
     table = {}
     peak = 1.0
     for i, call in enumerate(calls):
-        if isinstance(runner, JaxRunner):
-            seconds = runner.benchmark_call(
-                call, reps=reps, dtype=dtype or "float32")
-        else:
-            seconds = runner.benchmark_call(call, reps=reps)
+        seconds = runner.benchmark_call(call, reps=reps)
         table[(call.kind, call.dims)] = seconds
         if seconds > 0 and call.flops:
             peak = max(peak, call.flops / seconds)
@@ -158,20 +165,14 @@ def calibrate(
         calls = expression_calls(get_spec(expr), grid)
     elif grid not in GRIDS:
         raise ValueError(f"unknown grid {grid!r}; expected {sorted(GRIDS)}")
-    if backend == "blas":
-        runner = BlasRunner(reps=reps)
-        if dtype not in (None, "float64"):
-            # scipy BLAS kernels here are double precision only; a
-            # different dtype label would stamp a fingerprint the
-            # measurements don't match.
-            raise ValueError(
-                f"blas backend measures float64; got dtype={dtype!r}")
-        dtype = "float64"
-    elif backend == "jax":
-        runner = JaxRunner()
-        dtype = dtype or "float32"
-    else:
-        raise ValueError(f"unknown backend {backend!r}; expected blas|jax")
+    if backend not in registered_backends():
+        raise ValueError(
+            f"unknown backend {backend!r}; registered: "
+            f"{registered_backends()}")
+    dtype = dtype or backend_default_dtype(backend)
+    # Fixed-dtype backends (blas/numpy measure float64 only) raise here on
+    # a mismatched label rather than stamping a wrong fingerprint.
+    runner = make_backend(backend, reps=reps, dtype=dtype)
     fp = current_fingerprint(backend=backend, dtype=dtype)
     t0 = time.perf_counter()
     profile = sweep_kernels(runner, GRIDS.get(grid, ()), reps=reps,
@@ -186,7 +187,9 @@ def calibrate(
         prev_path = profile_path(fp, directory=out)
         if prev_path.is_file():
             prev, _ = load_profile(prev_path, expected_fingerprint=fp)
-            prev.table.update(profile.table)
+            # Rebind rather than update() in place: TableProfile's
+            # nearest-neighbour bucket index invalidates on rebinding.
+            prev.table = {**prev.table, **profile.table}
             prev.observe_peak(profile.peak())
             profile = prev
     path = None
@@ -203,7 +206,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.core.calibrate",
         description="Calibrate this machine's kernel performance profile.")
-    ap.add_argument("--backend", choices=("blas", "jax"), default="blas")
+    ap.add_argument("--backend", choices=registered_backends(),
+                    default="blas",
+                    help="execution backend to calibrate (the registry "
+                         "key is also the profile fingerprint key)")
     ap.add_argument("--expr", default=None,
                     help="calibrate only the kernel calls of one registered "
                          "expression family (see `python -m repro.core.sweep "
@@ -217,8 +223,9 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="output directory (default: the profile cache dir "
                          "that default_planner() auto-loads from)")
     ap.add_argument("--dtype", default=None,
-                    help="dtype label for the fingerprint "
-                         "(default: float64 for blas, float32 for jax)")
+                    help="dtype label for the fingerprint (default: the "
+                         "backend's own, e.g. float64 for blas/numpy, "
+                         "float32 for jax/pallas)")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
 

@@ -36,6 +36,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .anomaly import Classification, ConfusionMatrix, RegionScan, classify, scan_line
+from .backends import make_backend
 from .perfmodel import TableProfile, predict_algorithm_time
 from .runners import BlasRunner
 from .sweep import (
@@ -89,6 +90,7 @@ def experiment1_random_search(
     shards: Optional[int] = None,
     runner_factory: Optional[Callable[[], object]] = None,
     batch: int = 25,
+    exec_backend: Optional[str] = None,
 ) -> Experiment1Result:
     """Paper §3.4.1: sample instances u.a.r. until n anomalies are found.
 
@@ -98,7 +100,9 @@ def experiment1_random_search(
     already in ``atlas`` count as samples but are served from disk. With
     ``backend="process"`` one worker pool serves the entire search;
     ``runner`` configures only the serial backend — sharded backends build
-    their workers from ``runner_factory``.
+    their workers from ``runner_factory``. ``exec_backend`` names a
+    :mod:`repro.core.backends` registry entry to build default workers
+    from (so the harness runs unchanged on blas/numpy/jax/pallas).
     """
     rng = np.random.default_rng(seed)
     if runner is not None and backend != "serial":
@@ -108,7 +112,9 @@ def experiment1_random_search(
             f"runner= only configures the serial backend; backend="
             f"{backend!r} builds workers from runner_factory")
     if runner is None and runner_factory is None and backend == "serial":
-        runner = BlasRunner()  # one flush buffer for the whole search
+        # one instance (and so one flush buffer) for the whole search
+        runner = make_backend(exec_backend) if exec_backend \
+            else BlasRunner()
     executor = None
     if backend == "process":
         from concurrent.futures import ProcessPoolExecutor
@@ -126,7 +132,7 @@ def experiment1_random_search(
             res = sweep(spec, pts, runner=runner,
                         runner_factory=runner_factory, threshold=threshold,
                         backend=backend, shards=shards, atlas=atlas,
-                        executor=executor)
+                        executor=executor, exec_backend=exec_backend)
             samples += res.n_points
             wall += res.wall_s
             for inst in res.records:
@@ -158,6 +164,7 @@ def experiment2_regions(
     step: int = 10,
     threshold: float = 0.05,
     atlas: Optional[AnomalyAtlas] = None,
+    exec_backend: Optional[str] = None,
 ) -> Experiment2Result:
     """Paper §3.4.2: intersect regions with axis-aligned lines.
 
@@ -165,10 +172,13 @@ def experiment2_regions(
     so this harness probes point by point with the engine's measurement
     primitive; with an ``atlas`` every probe is served from / buffered
     into it (chunk-flushed by the atlas, once more on return), so repeat
-    traversals resume.
+    traversals resume. ``exec_backend`` names the registry backend to
+    probe with when no ``runner`` is given.
     """
     if runner is None:
-        runner = BlasRunner()  # one flush buffer for every probe
+        # one instance (one flush buffer) for every probe
+        runner = make_backend(exec_backend) if exec_backend \
+            else BlasRunner()
     classified: Dict[Tuple[int, ...], Instance] = {}
 
     def classify_at(point: Tuple[int, ...]) -> Classification:
@@ -205,7 +215,7 @@ class Experiment3Result:
 
 def experiment3_predict_from_benchmarks(
     spec: ExpressionSpec,
-    runner: BlasRunner,
+    runner,
     classified: Dict[Tuple[int, ...], Instance],
     threshold: float = 0.05,
     peak_flops: float = 1e11,
@@ -215,6 +225,10 @@ def experiment3_predict_from_benchmarks(
     predict each instance's fastest/cheapest sets from the additive model and
     compare against measured ground truth.
 
+    ``runner`` is an execution-backend instance, or a registry name
+    (``"blas"``/``"jax"``/…) resolved through the backend registry — the
+    prediction pipeline is backend-generic.
+
     The distinct-call set is collected across *all* instances up front and
     deduplicated (:func:`~repro.core.sweep.benchmark_unique_calls`), so
     each (kind, dims) is timed at most once per machine. Pass a persisted
@@ -222,6 +236,8 @@ def experiment3_predict_from_benchmarks(
     calibrations: only calls it lacks are measured, and the entries added
     here flow back to the caller through the result.
     """
+    if isinstance(runner, str):
+        runner = make_backend(runner)
     if profile is None:
         profile = TableProfile(peak_flops=peak_flops)
     cm = ConfusionMatrix()

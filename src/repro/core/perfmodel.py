@@ -25,7 +25,6 @@ Two profile families:
 from __future__ import annotations
 
 import dataclasses
-import math
 import threading
 from typing import Dict, Iterable, Optional, Tuple
 
@@ -147,9 +146,25 @@ class TableProfile(KernelProfile):
         self._peak = peak_flops
         self.table: Dict[Tuple[str, Tuple[int, ...]], float] = dict(table or {})
         self._write_lock = threading.Lock()
+        self._generation = 0
+        # (table-ref, {(kind, ndims): [(logdims, dims, seconds), ...]});
+        # rebuilt lazily whenever self.table has been rebound (record()
+        # and every supported mutation path rebind rather than mutate).
+        self._index: Optional[Tuple[Dict, Dict]] = None
 
     def peak(self) -> float:
         return self._peak
+
+    @property
+    def generation(self) -> int:
+        """Monotonic mutation counter, bumped by every :meth:`record`.
+
+        Consumers that memoise rankings derived from this table (the
+        planner's plan cache) fold it into their keys, so online
+        refinement invalidates stale decisions instead of freezing the
+        first ranking forever.
+        """
+        return self._generation
 
     def observe_peak(self, flops_per_s: float) -> None:
         """Raise the recorded peak when a faster throughput is observed.
@@ -171,9 +186,40 @@ class TableProfile(KernelProfile):
         # benchmark rep.
         with self._write_lock:
             self.table = {**self.table, (call.kind, call.dims): seconds}
+            self._generation += 1
 
     def __contains__(self, call: KernelCall) -> bool:
         return (call.kind, call.dims) in self.table
+
+    def _buckets(self) -> Dict:
+        """Per-``(kind, ndims)`` entry index with vectorized log-dims.
+
+        ``nearest`` used to scan the whole table per un-memoised call
+        during ranking; the bucket restricts each query to same-kind,
+        same-arity entries and turns the distance scan into one vectorized
+        numpy reduction over a precomputed log-dim matrix (see the
+        ``calibrate_nearest_query`` row in benchmarks/calibrate_bench.py).
+        The index is rebuilt lazily when ``self.table`` has been rebound —
+        every supported mutation path (:meth:`record`, the calibrate
+        merge) rebinds rather than mutates in place, and readers snapshot
+        one coherent (table, index) pair.
+        """
+        idx = self._index
+        table = self.table
+        if idx is not None and idx[0] is table:
+            return idx[1]
+        import numpy as np
+
+        groups: Dict[Tuple[str, int], list] = {}
+        for (kind, dims), t in table.items():
+            groups.setdefault((kind, len(dims)), []).append((dims, t))
+        buckets = {}
+        for key, entries in groups.items():
+            logdims = np.log(np.maximum(
+                np.array([d for d, _ in entries], dtype=float), 2.0))
+            buckets[key] = (logdims, entries)
+        self._index = (table, buckets)
+        return buckets
 
     def nearest(
         self, call: KernelCall,
@@ -185,16 +231,17 @@ class TableProfile(KernelProfile):
         :class:`HybridProfile` so "which entry is closest" and "which entry
         we extrapolate from" can never disagree.
         """
-        table = self.table  # snapshot ref (record() rebinds, never mutates)
-        best, bestdist = None, math.inf
-        lg = [math.log(max(2, d)) for d in call.dims]
-        for (k2, dims), t in table.items():
-            if k2 != call.kind or len(dims) != len(call.dims):
-                continue
-            dist = sum((math.log(max(2, d)) - g) ** 2 for d, g in zip(dims, lg))
-            if dist < bestdist:
-                bestdist, best = dist, (dims, t)
-        return None if best is None else (best[0], best[1], bestdist)
+        bucket = self._buckets().get((call.kind, len(call.dims)))
+        if bucket is None:
+            return None
+        import numpy as np
+
+        logdims, entries = bucket
+        lg = np.log(np.maximum(np.array(call.dims, dtype=float), 2.0))
+        dists = ((logdims - lg) ** 2).sum(axis=1)
+        i = int(np.argmin(dists))
+        dims, t = entries[i]
+        return (dims, t, float(dists[i]))
 
     def extrapolate(
         self, call: KernelCall,
@@ -250,22 +297,31 @@ class HybridProfile(KernelProfile):
     def peak(self) -> float:
         return self.table_profile.peak()
 
-    def source(self, call: KernelCall) -> str:
-        """Which model answers for ``call``: ``"table"`` | ``"analytical"``."""
-        if call in self.table_profile:
-            return "table"
-        near = self.table_profile.nearest(call)
-        if near is not None and near[2] <= self.max_log_dist:
-            return "table"
-        return "analytical"
+    def _resolve(self, call: KernelCall) -> Tuple[str, Optional[float]]:
+        """The one table-vs-analytical decision: ``(source, seconds)``.
 
-    def time(self, call: KernelCall, dtype_bytes: int = 8) -> float:
+        ``source()`` and ``time()`` both route here, so "which model
+        answers" and "what it answers" can never diverge (they used to
+        compute ``nearest`` independently). ``seconds`` is ``None`` iff
+        the analytical member answers — the caller supplies
+        ``dtype_bytes`` there.
+        """
         hit = self.table_profile.table.get((call.kind, call.dims))
         if hit is not None:
-            return hit
+            return "table", hit
         near = self.table_profile.nearest(call)
         if near is not None and near[2] <= self.max_log_dist:
-            return self.table_profile.extrapolate(call, near)
+            return "table", self.table_profile.extrapolate(call, near)
+        return "analytical", None
+
+    def source(self, call: KernelCall) -> str:
+        """Which model answers for ``call``: ``"table"`` | ``"analytical"``."""
+        return self._resolve(call)[0]
+
+    def time(self, call: KernelCall, dtype_bytes: int = 8) -> float:
+        src, seconds = self._resolve(call)
+        if src == "table":
+            return seconds
         return self.analytical.time(call, dtype_bytes)
 
     def record(self, call: KernelCall, seconds: float) -> None:

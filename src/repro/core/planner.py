@@ -33,10 +33,12 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import warnings
 from pathlib import Path
 from typing import Callable, Dict, Optional, Tuple
 
 from .algorithms import Algorithm, enumerate_algorithms
+from .backends import get_backend, measure_seconds
 from .expr import Chain, bind_dims
 from .perfmodel import AnalyticalTPUProfile, KernelProfile, TableProfile
 from .profile_store import (
@@ -44,7 +46,6 @@ from .profile_store import (
     load_default_profile,
     save_profile,
 )
-from .runners import JaxRunner, measure_seconds
 from .selector import as_hybrid, select
 
 
@@ -100,35 +101,52 @@ class Planner:
         self,
         discriminant: str = "perfmodel",
         profile: Optional[KernelProfile] = None,
-        use_pallas: bool = False,
+        backend: Optional[str] = None,
         dtype_bytes: int = 2,
         record: bool = False,
         observation_blend: float = 0.25,
         profile_backend: Optional[str] = None,
         profile_dtype: Optional[str] = None,
+        use_pallas: Optional[bool] = None,
     ):
+        # ``backend`` is an execution-backend registry name; the planner
+        # builds its callables with that backend's kernels. ``use_pallas``
+        # is the pre-registry spelling, kept as a deprecation shim.
+        if use_pallas is not None:
+            warnings.warn(
+                "Planner(use_pallas=...) is deprecated; pass "
+                "backend='pallas' (or 'jax') instead",
+                DeprecationWarning, stacklevel=2)
+            if backend is None:
+                backend = "pallas" if use_pallas else "jax"
+        self.backend = backend or "jax"
+        self.runner = get_backend(self.backend)
         # One (backend, dtype) key governs BOTH the cache load in
         # resolve_profile and save() below — asymmetric keys would persist
         # refinements to a file no future load ever reads. The default key
         # depends on `record`: a read-only planner consumes the BLAS
         # calibration (the CLI's default output), but a recording planner
-        # produces timings via JaxRunner, and those must never be filed
-        # under the blas/float64 fingerprint experiment3 trusts as
-        # isolated BLAS benchmarks.
+        # produces timings via its own execution backend, and those must
+        # never be filed under the blas/float64 fingerprint experiment3
+        # trusts as isolated BLAS benchmarks — so the recording default is
+        # the runner's own fingerprint tag (jax/float32, pallas/float32…).
+        run_tag, run_dtype = self.runner.fingerprint_tags()
         if profile_backend is None:
-            profile_backend = "jax" if record else "blas"
+            profile_backend = run_tag if record else "blas"
         if profile_dtype is None:
-            profile_dtype = "float32" if record else "float64"
+            profile_dtype = run_dtype if record else "float64"
         self.profile_backend = profile_backend
         self.profile_dtype = profile_dtype
         self.discriminant = discriminant
         self.profile = resolve_profile(profile, backend=profile_backend,
                                        dtype=profile_dtype)
-        self.runner = JaxRunner(use_pallas=use_pallas)
         self.dtype_bytes = dtype_bytes
         self.record = record
         self.observation_blend = observation_blend
-        self._cache: Dict[Tuple, Plan] = {}
+        # One slot per (structure, dims, discriminant); the stored value
+        # carries the profile generation it was ranked under, so online
+        # refinement invalidates it without growing the cache.
+        self._cache: Dict[Tuple, Tuple[int, Plan]] = {}
         self._lock = threading.Lock()
 
     def _key(self, c: Chain, env) -> Tuple:
@@ -139,12 +157,30 @@ class Planner:
         )
         return (struct, dims, self.discriminant)
 
+    def _profile_generation(self) -> int:
+        """Mutation counter of the live table profile (−1: no table).
+
+        Folding this into the memo slot is what lets a ``record=True``
+        planner re-rank after online refinement: without it, the first
+        plan per shape was frozen forever even when heavy refinement had
+        flipped the ranking (ISSUE 4 satellite). Discriminants whose
+        ranking does not read the profile (``flops`` is pure arithmetic;
+        ``measured`` re-times on hardware) pin the generation — otherwise
+        every observe() would force a provably identical re-enumeration
+        (or, for ``measured``, a fresh wall-clock timing sweep) per call.
+        """
+        if self.discriminant in ("flops", "measured"):
+            return -1
+        table = self._recording_table()
+        return table.generation if table is not None else -1
+
     def plan(self, c: Chain, env: Optional[Dict[str, int]] = None) -> Plan:
         key = self._key(c, env)
+        gen = self._profile_generation()
         with self._lock:
             hit = self._cache.get(key)
-        if hit is not None:
-            return hit
+        if hit is not None and hit[0] == gen:
+            return hit[1]
         algos = enumerate_algorithms(c, env)
         ranked = select(algos, self.discriminant, profile=self.profile,
                         dtype_bytes=self.dtype_bytes)
@@ -156,7 +192,7 @@ class Planner:
             discriminant=self.discriminant,
         )
         with self._lock:
-            self._cache[key] = plan
+            self._cache[key] = (gen, plan)
         return plan
 
     def __call__(self, c: Chain, *arrays, env=None):

@@ -77,11 +77,18 @@ def current_fingerprint(backend: str = "blas",
                         dtype: str = "float64") -> HardwareFingerprint:
     """Fingerprint of *this* process's execution target.
 
-    For the BLAS backend the device is the host ISA (profiles transfer
-    across same-ISA hosts only approximately, but that is the right
-    granularity for a cache key). For JAX it is the first device's kind.
+    For CPU backends (blas/numpy) the device is the host ISA (profiles
+    transfer across same-ISA hosts only approximately, but that is the
+    right granularity for a cache key). For device-sharded backends
+    (jax/pallas — consulted via the execution-backend registry) it is the
+    first JAX device's kind.
     """
-    if backend == "jax":
+    try:
+        from .backends import backend_shard_mode
+        on_device = backend_shard_mode(backend) == "device"
+    except KeyError:  # unregistered label (tests, foreign caches)
+        on_device = backend in ("jax", "pallas")
+    if on_device:
         try:
             import jax
             device = jax.devices()[0].device_kind

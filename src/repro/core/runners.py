@@ -1,462 +1,54 @@
-"""Algorithm executors + timers.
+"""Back-compat runner names over :mod:`repro.core.backends`.
 
-Two backends:
+The executors live in the backend registry now (ISSUE 4): one generic
+step walker plus per-backend kernel ops in ``repro.core.backends``,
+resolved by name via ``get_backend``. This module keeps the pre-registry
+import surface alive:
 
-* :class:`BlasRunner` — executes algorithms through *actual BLAS* kernels
-  (``scipy.linalg.blas`` dgemm/dsyrk/dsymm), matching the paper's
-  methodology: double precision, median-of-k timing, cache flush between
-  repetitions. This is what the paper-reproduction experiments
-  (benchmarks/experiment*.py) measure.
-* :class:`JaxRunner` — builds a jit-able JAX callable for an algorithm, used
-  where the planner is embedded in model code (Muon, SSD). On TPU the gemm/
-  syrk/symm steps lower to the Pallas kernels in :mod:`repro.kernels`.
+* :class:`BlasRunner`  — alias of :class:`~repro.core.backends.BlasBackend`
+  (the ``blas`` registry entry).
+* :class:`JaxRunner`   — :class:`~repro.core.backends.JaxBackend` with the
+  legacy constructor order (``use_pallas`` first); ``use_pallas=True``
+  behaves as the ``pallas`` registry entry.
+* :func:`reference_execute` — the numpy oracle (``numpy`` entry).
+* :func:`measure_seconds`, :class:`CacheFlusher` — re-exports.
 
-The executor walks :class:`~repro.core.algorithms.Algorithm` steps; operand
-leaves reference the chain's input matrices, transposition handled at leaf
-fetch (BLAS ``trans`` flags / ``jnp.swapaxes``).
+New code should resolve executors through the registry instead::
+
+    from repro.core.backends import get_backend
+    runner = get_backend("pallas", reps=3)
 """
 
 from __future__ import annotations
 
-import time
-from typing import Callable, Dict, List, Optional
+from typing import Optional
 
 import numpy as np
 
-from .algorithms import Algorithm, Leaf, Step
-from .flops import KernelCall
-
-try:  # scipy is available in this container; keep import soft for docs envs
-    from scipy.linalg import blas as _blas
-except Exception:  # pragma: no cover
-    _blas = None
-
-
-# ------------------------------------------------------------------ BLAS ---
-
-_FLUSH_BYTES = 64 * 1024 * 1024  # > L3 on the container host
+from .backends import (  # noqa: F401  (re-exported back-compat surface)
+    CacheFlusher,
+    JaxBackend,
+    measure_seconds,
+    reference_execute,
+)
+from .backends import BlasBackend as BlasRunner  # noqa: F401
 
 
-class CacheFlusher:
-    """Paper §3.4: flush the cache prior to each repetition."""
+class JaxRunner(JaxBackend):
+    """Legacy constructor order for the jax/pallas backends.
 
-    def __init__(self, nbytes: int = _FLUSH_BYTES):
-        self._buf = np.zeros(nbytes // 8, dtype=np.float64)
-
-    def flush(self) -> None:
-        # Touch every cache line; the sum defeats dead-code elimination.
-        self._buf += 1.0
-        _ = float(self._buf[:: 4096].sum())
-
-
-def _blas_step(step: Step, fetch: Callable[[object], np.ndarray]) -> np.ndarray:
-    """Execute one kernel call with scipy BLAS (float64, Fortran order)."""
-    call = step.call
-    if call.kind == "gemm":
-        a = fetch(step.lhs)
-        b = fetch(step.rhs)
-        return _blas.dgemm(1.0, a, b)
-    if call.kind == "syrk":
-        a = fetch(step.lhs)
-        # dsyrk computes one triangle of a·aᵀ (lower, given lower=1).
-        return _blas.dsyrk(1.0, a, lower=1)
-    if call.kind == "symm":
-        # The symmetric operand (read as its lower triangle) is lhs for
-        # side L and rhs for side R; dsymm(side=1) computes b·s.
-        if step.symm_side == "R":
-            s = fetch(step.rhs)
-            b = fetch(step.lhs)
-            return _blas.dsymm(1.0, s, b, side=1, lower=1)
-        s = fetch(step.lhs)
-        b = fetch(step.rhs)
-        return _blas.dsymm(1.0, s, b, side=0, lower=1)
-    if call.kind == "tri2full":
-        t = fetch(step.lhs)
-        return np.asfortranarray(
-            np.tril(t) + np.tril(t, -1).T
-        )
-    raise ValueError(call.kind)
-
-
-# ----------------------------------------------------- numpy reference ------
-
-
-def _mirror_lower(t: np.ndarray) -> np.ndarray:
-    return np.tril(t) + np.tril(t, -1).T
-
-
-def reference_execute(alg: Algorithm,
-                      operands: Dict[int, np.ndarray]) -> np.ndarray:
-    """Pure-numpy oracle executor for an algorithm's step sequence.
-
-    Semantically identical to :meth:`BlasRunner.execute` but with no
-    scipy dependency and no timing concerns — the numerical correctness
-    gate every registered expression's algorithms are checked against
-    (see tests/test_expressions.py). Honors triangle storage (SYRK output
-    keeps only the lower triangle; SYMM/TRI2FULL read only the lower
-    triangle of symmetric operands) and SYMM sides.
+    ``JaxRunner(use_pallas=True)`` is the ``pallas`` registry entry's
+    behaviour; prefer ``get_backend("pallas")`` in new code.
     """
-    inter: Dict[int, np.ndarray] = {}
 
-    def fetch(ref: object) -> np.ndarray:
-        if isinstance(ref, Leaf):
-            a = np.asarray(operands[ref.base])
-            return a.T if ref.transposed else a
-        return inter[ref]
-
-    out = None
-    for step in alg.steps:
-        kind = step.call.kind
-        if kind == "gemm":
-            out = fetch(step.lhs) @ fetch(step.rhs)
-        elif kind == "syrk":
-            a = fetch(step.lhs)
-            out = np.tril(a @ a.T)
-        elif kind == "symm":
-            if step.symm_side == "R":
-                out = fetch(step.lhs) @ _mirror_lower(fetch(step.rhs))
-            else:
-                out = _mirror_lower(fetch(step.lhs)) @ fetch(step.rhs)
-        elif kind == "tri2full":
-            out = _mirror_lower(fetch(step.lhs))
-        else:
-            raise ValueError(kind)
-        inter[step.out] = out
-    return out
-
-
-class BlasRunner:
-    """Execute/time algorithms with real BLAS kernels (paper methodology)."""
-
-    def __init__(self, reps: int = 10, flush_cache: bool = True,
+    def __init__(self, use_pallas: bool = False, device=None, reps: int = 3,
+                 dtype: str = "float32",
                  rng: Optional[np.random.Generator] = None):
-        if _blas is None:  # pragma: no cover
-            raise RuntimeError("scipy BLAS unavailable")
-        self.reps = reps
-        self.flusher = CacheFlusher() if flush_cache else None
-        self.rng = rng or np.random.default_rng(0)
-
-    # -- operand synthesis ------------------------------------------------
-    def make_operands(self, alg: Algorithm) -> Dict[int, np.ndarray]:
-        """Fresh random inputs for every distinct leaf index of ``alg``.
-
-        Leaves are stored untransposed; transposition applied at fetch.
-        """
-        ops: Dict[int, np.ndarray] = {}
-        for step in alg.steps:
-            for ref in (step.lhs, step.rhs):
-                if isinstance(ref, Leaf) and ref.base not in ops:
-                    # Underlying (untransposed) matrix shape.
-                    r, c = (ref.cols, ref.rows) if ref.transposed else (
-                        ref.rows, ref.cols)
-                    a = self.rng.standard_normal((r, c))
-                    if ref.symmetric:
-                        # SYMM-based algorithms read only a triangle; a
-                        # non-symmetric operand would make them disagree
-                        # with the GEMM-based ones.
-                        a = (a + a.T) / 2.0
-                    ops[ref.base] = np.asfortranarray(a)
-        return ops
-
-    def _fetcher(self, operands: Dict[int, np.ndarray],
-                 inter: Dict[int, np.ndarray]) -> Callable:
-        def fetch(ref):
-            if isinstance(ref, Leaf):
-                a = operands[ref.base]
-                return a.T if ref.transposed else a
-            return inter[ref]
-        return fetch
-
-    def execute(self, alg: Algorithm,
-                operands: Dict[int, np.ndarray]) -> np.ndarray:
-        inter: Dict[int, np.ndarray] = {}
-        out = None
-        fetch = self._fetcher(operands, inter)
-        for step in alg.steps:
-            out = _blas_step(step, fetch)
-            inter[step.out] = out
-        return out
-
-    def time_algorithm(self, alg: Algorithm,
-                       operands: Optional[Dict[int, np.ndarray]] = None
-                       ) -> float:
-        """Median-of-reps wall time (paper §3.4), cache flushed per rep."""
-        if operands is None:
-            operands = self.make_operands(alg)
-        # warm-up (library init, page faults)
-        self.execute(alg, operands)
-        ts: List[float] = []
-        for _ in range(self.reps):
-            if self.flusher:
-                self.flusher.flush()
-            t0 = time.perf_counter()
-            self.execute(alg, operands)
-            ts.append(time.perf_counter() - t0)
-        return float(np.median(ts))
-
-    # -- Experiment 3: isolated kernel benchmarks -------------------------
-    def benchmark_call(self, call: KernelCall,
-                       reps: Optional[int] = None) -> float:
-        """Time one kernel call in isolation with a flushed cache.
-
-        ``reps`` overrides the runner default for this call (the
-        calibration sweep passes it through explicitly).
-        """
-        reps = self.reps if reps is None else reps
-        rng = self.rng
-        if call.kind == "gemm":
-            m, n, k = call.dims
-            a = np.asfortranarray(rng.standard_normal((m, k)))
-            b = np.asfortranarray(rng.standard_normal((k, n)))
-
-            def fn():
-                return _blas.dgemm(1.0, a, b)
-        elif call.kind == "syrk":
-            m, k = call.dims
-            a = np.asfortranarray(rng.standard_normal((m, k)))
-
-            def fn():
-                return _blas.dsyrk(1.0, a, lower=1)
-        elif call.kind == "symm":
-            m, n = call.dims
-            s = np.asfortranarray(rng.standard_normal((m, m)))
-            s = np.asfortranarray(s + s.T)
-            b = np.asfortranarray(rng.standard_normal((m, n)))
-
-            def fn():
-                return _blas.dsymm(1.0, s, b, side=0, lower=1)
-        elif call.kind == "tri2full":
-            (m,) = call.dims
-            t = np.asfortranarray(np.tril(rng.standard_normal((m, m))))
-
-            def fn():
-                return np.asfortranarray(np.tril(t) + np.tril(t, -1).T)
-        else:
-            raise ValueError(call.kind)
-        fn()  # warm-up
-        ts = []
-        for _ in range(reps):
-            if self.flusher:
-                self.flusher.flush()
-            t0 = time.perf_counter()
-            fn()
-            ts.append(time.perf_counter() - t0)
-        return float(np.median(ts))
+        super().__init__(device=device, reps=reps, dtype=dtype, rng=rng,
+                         use_pallas=use_pallas)
 
 
-# ------------------------------------------------------------------- JAX ---
-
-
-class JaxRunner:
-    """Build a jit-able callable for an Algorithm.
-
-    ``use_pallas=True`` routes gemm/syrk/symm through the Pallas TPU kernels
-    (interpret mode on CPU); otherwise pure jnp — the two must agree, which
-    tests/test_kernels.py asserts.
-
-    ``device`` pins every operand this runner synthesizes (and therefore
-    the computation, which follows its inputs) to one JAX device — the
-    sweep engine constructs one runner per device to shard a grid across
-    all of them. ``None`` leaves placement to JAX's default.
-    """
-
-    def __init__(self, use_pallas: bool = False, device=None,
-                 reps: int = 3, dtype: str = "float32",
-                 rng: Optional[np.random.Generator] = None):
-        self.use_pallas = use_pallas
-        self.device = device
-        self.reps = reps
-        self.dtype = dtype
-        self.rng = rng or np.random.default_rng(0)
-
-    def build(self, alg: Algorithm) -> Callable:
-        import jax.numpy as jnp
-
-        if self.use_pallas:
-            from repro.kernels import ops as kops
-
-        use_pallas = self.use_pallas
-
-        def mirror(t):
-            return jnp.tril(t) + jnp.swapaxes(jnp.tril(t, -1), -1, -2)
-
-        def fn(*inputs):
-            inter: Dict[int, object] = {}
-
-            def fetch(ref):
-                if isinstance(ref, Leaf):
-                    a = inputs[ref.base]
-                    return jnp.swapaxes(a, -1, -2) if ref.transposed else a
-                return inter[ref]
-
-            out = None
-            for step in alg.steps:
-                c = step.call
-                if c.kind == "gemm":
-                    a, b = fetch(step.lhs), fetch(step.rhs)
-                    out = (kops.gemm(a, b) if use_pallas else a @ b)
-                elif c.kind == "syrk":
-                    a = fetch(step.lhs)
-                    out = (kops.syrk(a) if use_pallas
-                           else jnp.tril(a @ jnp.swapaxes(a, -1, -2)))
-                elif c.kind == "symm":
-                    if step.symm_side == "R":
-                        # B·S with S symmetric: (S·Bᵀ)ᵀ via the side-L
-                        # kernel, or mirror-and-matmul in plain jnp.
-                        b, s = fetch(step.lhs), fetch(step.rhs)
-                        if use_pallas:
-                            out = jnp.swapaxes(
-                                kops.symm(s, jnp.swapaxes(b, -1, -2)),
-                                -1, -2)
-                        else:
-                            out = b @ mirror(s)
-                    else:
-                        s, b = fetch(step.lhs), fetch(step.rhs)
-                        if use_pallas:
-                            out = kops.symm(s, b)
-                        else:
-                            out = mirror(s) @ b
-                elif c.kind == "tri2full":
-                    out = mirror(fetch(step.lhs))
-                else:
-                    raise ValueError(c.kind)
-                inter[step.out] = out
-            return out
-
-        return fn
-
-    def num_inputs(self, alg: Algorithm) -> int:
-        mx = -1
-        for step in alg.steps:
-            for ref in (step.lhs, step.rhs):
-                if isinstance(ref, Leaf):
-                    mx = max(mx, ref.index)
-        return mx + 1
-
-    # -- measure interface (mirrors BlasRunner) ----------------------------
-    def make_operands(self, alg: Algorithm) -> Dict[int, object]:
-        """Device-resident random inputs keyed by leaf *base* index.
-
-        Same contract as :meth:`BlasRunner.make_operands`, so
-        ``measure_instance``/the sweep engine treat both runners uniformly.
-        """
-        import jax
-        import jax.numpy as jnp
-
-        ops: Dict[int, object] = {}
-        for step in alg.steps:
-            for ref in (step.lhs, step.rhs):
-                if isinstance(ref, Leaf) and ref.base not in ops:
-                    r, c = (ref.cols, ref.rows) if ref.transposed else (
-                        ref.rows, ref.cols)
-                    arr = self.rng.standard_normal((r, c))
-                    if ref.symmetric:
-                        # symmetric leaves must be symmetric (SYMM reads
-                        # only a triangle); mirrors BlasRunner.
-                        arr = (arr + arr.T) / 2.0
-                    a = jnp.asarray(arr, dtype=self.dtype)
-                    if self.device is not None:
-                        a = jax.device_put(a, self.device)
-                    ops[ref.base] = a
-        return ops
-
-    def time_algorithm(self, alg: Algorithm,
-                       operands: Optional[Dict[int, object]] = None
-                       ) -> float:
-        """Median-of-reps wall seconds, jitted and blocked on completion.
-
-        Compile time is excluded by the warm-up call; blocking defeats
-        async dispatch under-reporting. There is no cache flush here — on
-        the JAX backend operands live in HBM and the measured quantity is
-        steady-state device time, not the paper's cold-cache CPU protocol.
-        """
-        import jax
-
-        if operands is None:
-            operands = self.make_operands(alg)
-        n = self.num_inputs(alg)
-        some = next(iter(operands.values()))
-        # fetch only ever reads base positions; fill the rest with any array
-        args = [operands.get(i, some) for i in range(n)]
-        fn = jax.jit(self.build(alg))
-        jax.block_until_ready(fn(*args))  # warm-up: compile + page-in
-        ts: List[float] = []
-        for _ in range(self.reps):
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn(*args))
-            ts.append(time.perf_counter() - t0)
-        return float(np.median(ts))
-
-    # -- calibration: isolated kernel benchmarks --------------------------
-    def benchmark_call(self, call: KernelCall, reps: int = 5,
-                       dtype: str = "float32",
-                       seed: int = 0) -> float:
-        """Median wall seconds for one kernel call on the JAX backend.
-
-        Mirrors :meth:`BlasRunner.benchmark_call` so the calibration sweep
-        (:mod:`repro.core.calibrate`) treats the two backends uniformly.
-        Dispatch is jitted and the result blocked on, so compile time is
-        excluded (warm-up) and async dispatch doesn't under-report.
-        """
-        import jax
-        import jax.numpy as jnp
-
-        rng = np.random.default_rng(seed)
-
-        def arr(*shape):
-            a = jnp.asarray(rng.standard_normal(shape), dtype=dtype)
-            if a.dtype != jnp.dtype(dtype):
-                # e.g. float64 requested with jax_enable_x64 off: JAX
-                # silently downcasts, which would stamp a fingerprint the
-                # measurements don't match.
-                raise ValueError(
-                    f"jax produced dtype {a.dtype} for requested {dtype!r} "
-                    f"(for float64, enable jax_enable_x64)")
-            return a
-
-        if call.kind == "gemm":
-            m, n, k = call.dims
-            args = (arr(m, k), arr(k, n))
-            op = jax.jit(lambda a, b: a @ b)
-        elif call.kind == "syrk":
-            m, k = call.dims
-            args = (arr(m, k),)
-            op = jax.jit(lambda a: jnp.tril(a @ jnp.swapaxes(a, -1, -2)))
-        elif call.kind == "symm":
-            m, n = call.dims
-            s = arr(m, m)
-            args = (s + jnp.swapaxes(s, -1, -2), arr(m, n))
-            op = jax.jit(lambda s, b: s @ b)
-        elif call.kind == "tri2full":
-            (m,) = call.dims
-            args = (jnp.tril(arr(m, m)),)
-            op = jax.jit(lambda t: jnp.tril(t) + jnp.swapaxes(
-                jnp.tril(t, -1), -1, -2))
-        else:
-            raise ValueError(call.kind)
-        jax.block_until_ready(op(*args))  # warm-up: compile + page-in
-        ts = []
-        for _ in range(reps):
-            t0 = time.perf_counter()
-            jax.block_until_ready(op(*args))
-            ts.append(time.perf_counter() - t0)
-        return float(np.median(ts))
-
-
-def measure_seconds(fn: Callable, *args) -> tuple:
-    """Run ``fn(*args)``, blocking on JAX async dispatch; (result, secs).
-
-    Used by the planner's online refinement so the recorded time reflects
-    device completion rather than dispatch-queue insertion. Deferred
-    device errors surfaced by the block propagate — recording the
-    dispatch-only time of a failed computation would poison the profile.
-    """
-    try:
-        import jax
-    except Exception:  # pragma: no cover - jax is a hard dep in practice
-        jax = None
-    t0 = time.perf_counter()
-    out = fn(*args)
-    if jax is not None:
-        jax.block_until_ready(out)  # no-op for non-JAX leaves
-    return out, time.perf_counter() - t0
+__all__ = [
+    "BlasRunner", "JaxRunner", "CacheFlusher", "measure_seconds",
+    "reference_execute",
+]

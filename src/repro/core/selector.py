@@ -20,6 +20,7 @@ from __future__ import annotations
 from typing import Dict, List, Optional, Sequence
 
 from .algorithms import Algorithm
+from .backends import get_backend
 from .perfmodel import (
     AnalyticalTPUProfile,
     HybridProfile,
@@ -27,7 +28,6 @@ from .perfmodel import (
     TableProfile,
     predict_algorithm_time,
 )
-from .runners import BlasRunner
 
 DISCRIMINANTS = ("flops", "perfmodel", "hybrid", "measured")
 
@@ -88,9 +88,21 @@ def rank_by_hybrid(
 
 def rank_by_measurement(
     algos: Sequence[Algorithm],
-    runner: Optional[BlasRunner] = None,
+    runner=None,
+    backend: Optional[str] = None,
 ) -> List[Algorithm]:
-    r = runner or BlasRunner(reps=3)
+    """Ascending measured time on any registered execution backend.
+
+    ``runner`` is an explicit backend instance; ``backend`` is a registry
+    name (``blas``/``numpy``/``jax``/``pallas``/…) resolved through
+    :func:`~repro.core.backends.get_backend`. Passing both raises —
+    silently preferring one would measure on an unintended executor.
+    Default: a fresh ``blas`` runner (the paper's ground-truth protocol).
+    """
+    if runner is not None and backend is not None:
+        raise ValueError("pass either runner= or backend=, not both")
+    r = runner if runner is not None else get_backend(backend or "blas",
+                                                     reps=3)
     times: Dict[str, float] = {}
     for a in algos:
         times[a.name] = r.time_algorithm(a)
@@ -101,8 +113,9 @@ def select(
     algos: Sequence[Algorithm],
     discriminant: str = "perfmodel",
     profile: Optional[KernelProfile] = None,
-    runner: Optional[BlasRunner] = None,
+    runner=None,
     dtype_bytes: int = 2,
+    backend: Optional[str] = None,
 ) -> List[Algorithm]:
     """Rank ``algos`` best-first under the chosen discriminant.
 
@@ -115,8 +128,10 @@ def select(
       entries where a calibration has them — exactly or by near
       nearest-neighbour — analytical fallback elsewhere), so partial
       calibrations still rank every candidate.
-    * ``measured``  — ignored; ``runner`` (default: a fresh
-      :class:`~repro.core.runners.BlasRunner`) times each algorithm.
+    * ``measured``  — ignored; ``runner`` (an execution-backend instance)
+      or ``backend`` (a :mod:`repro.core.backends` registry name —
+      ``blas``/``numpy``/``jax``/``pallas``/…) times each algorithm;
+      default a fresh ``blas`` runner.
 
     This is the single entry point the planner uses; it takes rank 0 of
     the returned list.
@@ -128,7 +143,7 @@ def select(
     if discriminant == "hybrid":
         return rank_by_hybrid(algos, profile, dtype_bytes)
     if discriminant == "measured":
-        return rank_by_measurement(algos, runner)
+        return rank_by_measurement(algos, runner, backend=backend)
     raise ValueError(
         f"unknown discriminant {discriminant!r}; expected {DISCRIMINANTS}")
 
@@ -138,16 +153,21 @@ def select_expression(
     point: Sequence[int],
     discriminant: str = "perfmodel",
     profile: Optional[KernelProfile] = None,
-    runner: Optional[BlasRunner] = None,
+    runner=None,
     dtype_bytes: int = 2,
+    backend: Optional[str] = None,
 ) -> List[Algorithm]:
     """Rank a *registered* expression family's algorithms at one instance.
 
     ``expr`` is a registry CLI name (``abcd``, ``aatb``, ``abtb``, …, see
     :mod:`repro.core.expressions`); enumeration and ranking both flow from
     the registry entry, so newly registered families are selectable with
-    no further wiring.
+    no further wiring. With ``discriminant="measured"``, ``backend``
+    names the execution backend to time on — any registry entry works,
+    so a family can be ranked on MKL-style BLAS and on Pallas with the
+    same call.
     """
     from .expressions import get_spec
     return select(get_spec(expr).algorithms(point), discriminant,
-                  profile=profile, runner=runner, dtype_bytes=dtype_bytes)
+                  profile=profile, runner=runner, dtype_bytes=dtype_bytes,
+                  backend=backend)

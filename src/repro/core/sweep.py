@@ -13,12 +13,16 @@ layer:
   any registered expression family: the paper's ``ABCD``/``AAᵀB`` plus the
   zoo (``abcde``, ``abtb``, ``btsb``, ``atab``, ``abab``); ``--expr``
   accepts every registry entry and ``--list-exprs`` prints them.
-* :func:`sweep` — the one measurement path. Shards the grid across workers:
-  a process pool for the BLAS runner (kernel timing is GIL-bound and
-  cache-sensitive, so isolation per process matches the paper's protocol),
-  or one :class:`~repro.core.runners.JaxRunner` per JAX device (operands are
-  device-pinned; devices measure their shards concurrently). Results stream
-  into the atlas in chunks, so a killed sweep resumes from the last chunk.
+* :func:`sweep` — the one measurement path, over any registered execution
+  backend (:mod:`repro.core.backends`: ``blas``/``numpy``/``jax``/
+  ``pallas``). Shards the grid across workers: a process pool for the
+  CPU backends (kernel timing is GIL-bound and cache-sensitive, so
+  isolation per process matches the paper's protocol), or one
+  device-pinned backend instance per JAX device (devices measure their
+  shards concurrently). Results stream into the atlas in chunks, so a
+  killed sweep resumes from the last chunk. ``--compare-backends a,b``
+  diffs two backends' atlases and reports instances where the *fastest
+  algorithm differs by backend*.
 * :class:`AnomalyAtlas` — persistent, resumable, versioned JSONL store of
   per-instance :class:`~repro.core.anomaly.Classification` results, one file
   per (expression, threshold, hardware fingerprint) — the same fingerprint
@@ -73,6 +77,12 @@ from .expressions import (
     get_spec as get_spec,
     registered_names as registered_names,
 )
+from .backends import (
+    backend_default_dtype,
+    backend_shard_mode,
+    make_backend,
+    registered_backends,
+)
 from .flops import KernelCall
 from .perfmodel import KernelProfile, TableProfile, predict_algorithm_time
 from .profile_store import (
@@ -82,7 +92,7 @@ from .profile_store import (
     load_default_profile,
     save_profile,
 )
-from .runners import BlasRunner, JaxRunner
+from .runners import BlasRunner
 
 # --------------------------------------------------- instance measurement ---
 
@@ -112,9 +122,8 @@ def measure_instance(
     """Time every algorithm for one instance and classify it.
 
     ``runner`` is any object with ``make_operands(alg) -> dict`` and
-    ``time_algorithm(alg, operands) -> seconds`` —
-    :class:`~repro.core.runners.BlasRunner` and
-    :class:`~repro.core.runners.JaxRunner` both qualify.
+    ``time_algorithm(alg, operands) -> seconds`` — every registered
+    :class:`~repro.core.backends.ExecutionBackend` qualifies.
     """
     algos = spec.algorithms(point)
     times: Dict[str, float] = {}
@@ -413,12 +422,12 @@ def _run_process_pool(spec, points, runner_factory, threshold, shards,
             pool.shutdown()
 
 
-def _run_jax_devices(spec, points, threshold, reps, use_pallas, dtype,
+def _run_jax_devices(spec, points, threshold, reps, exec_backend, dtype,
                      shards, on_done) -> None:
-    """Shard points across JAX devices, one pinned runner per device.
+    """Shard points across JAX devices, one pinned backend per device.
 
-    Each device gets a round-robin shard and its own
-    :class:`~repro.core.runners.JaxRunner` whose operands are
+    Each device gets a round-robin shard and its own registry backend
+    (``jax``/``pallas``/any device-sharded entry) whose operands are
     ``device_put`` to it; device shards run concurrently on threads (jit
     dispatch releases the GIL while devices execute). On a 1-device host
     this degrades to the serial path. Results stream to ``on_done`` per
@@ -432,8 +441,8 @@ def _run_jax_devices(spec, points, threshold, reps, use_pallas, dtype,
     devices = jax.devices()
     if shards:
         devices = devices[:shards]
-    runners = [JaxRunner(use_pallas=use_pallas, device=d, reps=reps,
-                         dtype=dtype) for d in devices]
+    runners = [make_backend(exec_backend, device=d, reps=reps, dtype=dtype)
+               for d in devices]
     shards_pts = [points[i::len(devices)] for i in range(len(devices))]
     lock = threading.Lock()
 
@@ -493,6 +502,7 @@ def sweep(
     chunk_size: int = 8,
     max_instances: Optional[int] = None,
     reps: int = 3,
+    exec_backend: Optional[str] = None,
     use_pallas: bool = False,
     dtype: str = "float32",
     executor=None,
@@ -500,15 +510,24 @@ def sweep(
 ) -> SweepResult:
     """Measure + classify a set of instances — the one measurement path.
 
+    ``backend`` picks the *sharding strategy*; ``exec_backend`` names the
+    *execution backend* (a :mod:`repro.core.backends` registry key) the
+    workers are built from when no explicit ``runner``/``runner_factory``
+    is given:
+
     * ``backend="serial"``  — this process, ``runner`` (or a fresh
-      ``BlasRunner``) measuring point by point.
+      instance of ``exec_backend``, default ``blas``) measuring point by
+      point.
     * ``backend="process"`` — shard across ``shards`` worker processes;
-      requires a picklable zero-arg ``runner_factory`` (e.g.
-      ``functools.partial(BlasRunner, reps=3)``) since runners hold
-      unshippable state (cache-flush buffers, BLAS handles).
+      ``runner_factory`` must be a picklable zero-arg callable (e.g.
+      ``functools.partial(make_backend, "numpy", reps=3)``) since runners
+      hold unshippable state (cache-flush buffers, BLAS handles);
+      defaults to ``exec_backend`` (default ``blas``).
     * ``backend="jax"``     — shard across JAX devices with device-pinned
-      :class:`~repro.core.runners.JaxRunner` instances (``reps``,
-      ``use_pallas``, ``dtype`` configure them).
+      instances of ``exec_backend`` (default ``jax``; ``pallas`` routes
+      through the Pallas kernels); ``reps``/``dtype`` configure them.
+      ``use_pallas=True`` is the deprecated spelling of
+      ``exec_backend="pallas"``.
 
     Points already present in ``atlas`` are *skipped* (served from disk) —
     that is what makes a restarted sweep resume instead of re-measuring.
@@ -528,8 +547,15 @@ def sweep(
         raise ValueError(
             f"runner= only configures the serial backend; backend="
             f"{backend!r} builds its own workers (pass runner_factory for "
-            f"'process', or reps/use_pallas/dtype for 'jax') — refusing to "
-            f"silently measure with a different configuration")
+            f"'process', or exec_backend/reps/dtype for 'jax') — refusing "
+            f"to silently measure with a different configuration")
+    if use_pallas:
+        # Deprecated spelling of exec_backend="pallas" (pre-registry API).
+        if exec_backend not in (None, "pallas"):
+            raise ValueError(
+                f"use_pallas=True conflicts with exec_backend="
+                f"{exec_backend!r}")
+        exec_backend = "pallas"
     want = list(dict.fromkeys(tuple(int(x) for x in p) for p in points))
     for p in want:
         if len(p) != spec.ndims:
@@ -564,18 +590,28 @@ def sweep(
         elif backend == "serial":
             r = runner
             if r is None:
-                r = runner_factory() if runner_factory else BlasRunner(
-                    reps=reps)
+                if runner_factory is not None:
+                    r = runner_factory()
+                elif exec_backend is not None:
+                    # dtype is the device-backend knob (float32 default);
+                    # fixed-dtype CPU backends keep their own default.
+                    kw = {"reps": reps}
+                    if backend_shard_mode(exec_backend) == "device":
+                        kw["dtype"] = dtype
+                    r = make_backend(exec_backend, **kw)
+                else:
+                    r = BlasRunner(reps=reps)
             _run_serial(spec, todo, r, threshold, on_done)
         elif backend == "process":
             if runner_factory is None:
-                runner_factory = functools.partial(BlasRunner, reps=reps)
+                runner_factory = functools.partial(
+                    make_backend, exec_backend or "blas", reps=reps)
             _run_process_pool(spec, todo, runner_factory, threshold,
                               shards or os.cpu_count() or 1, chunk_size,
                               on_done, executor=executor)
         elif backend == "jax":
-            _run_jax_devices(spec, todo, threshold, reps, use_pallas, dtype,
-                             shards, on_done)
+            _run_jax_devices(spec, todo, threshold, reps,
+                             exec_backend or "jax", dtype, shards, on_done)
         else:
             raise ValueError(
                 f"unknown backend {backend!r}; expected serial|process|jax")
@@ -637,11 +673,9 @@ def benchmark_unique_calls(
         if call in profile:
             n_reused += 1
             continue
-        if isinstance(runner, JaxRunner):
-            seconds = runner.benchmark_call(
-                call, reps=reps or runner.reps, dtype=runner.dtype)
-        else:
-            seconds = runner.benchmark_call(call, reps=reps)
+        # One signature across every backend: dtype/device/flush protocol
+        # live on the runner instance (see ExecutionBackend.benchmark_call).
+        seconds = runner.benchmark_call(call, reps=reps)
         profile.record(call, seconds)
         n_measured += 1
         if seconds > 0 and call.flops:
@@ -675,6 +709,96 @@ def predict_classifications(
         flops = {a.name: a.flops for a in algos}
         out[p] = classify(times, flops, threshold=threshold)
     return out
+
+
+# ------------------------------------------------- cross-backend diffing ---
+
+
+@dataclasses.dataclass
+class BackendDisagreement:
+    """One instance where two backends' verdicts differ."""
+
+    point: Tuple[int, ...]
+    fastest: Dict[str, Tuple[str, ...]]   # backend -> fastest set
+    is_anomaly: Dict[str, bool]
+    time_score: Dict[str, float]
+
+
+@dataclasses.dataclass
+class BackendComparison:
+    """Diff of two per-backend atlases over one point set.
+
+    ``fastest_differs`` lists instances whose fastest-algorithm sets are
+    *disjoint* across the two backends — the same math, a different
+    winning kernel sequence purely because the kernel implementations
+    differ. This is the result class the paper could not measure on one
+    library. ``anomaly_differs`` lists instances whose anomaly verdicts
+    disagree (an instance can be an MKL-anomaly but not an XLA-anomaly).
+    """
+
+    spec_name: str
+    backends: Tuple[str, str]
+    n_points: int
+    fastest_differs: List[BackendDisagreement]
+    anomaly_differs: List[BackendDisagreement]
+    results: Dict[str, SweepResult]
+
+    @property
+    def fastest_differs_rate(self) -> float:
+        return len(self.fastest_differs) / self.n_points if self.n_points \
+            else 0.0
+
+
+def compare_backends(
+    spec: ExpressionSpec,
+    points: Sequence[Sequence[int]],
+    sweeps: Mapping[str, SweepResult],
+) -> BackendComparison:
+    """Diff two (or more — pairwise over the first two) backend sweeps.
+
+    ``sweeps`` maps backend name -> the :func:`sweep` result for *the
+    same* spec and point set on that backend (each typically persisted in
+    its own fingerprint-keyed atlas). Points missing from either result
+    (e.g. budget-capped partial sweeps) are skipped.
+    """
+    names = list(sweeps)
+    if len(names) < 2:
+        raise ValueError("compare_backends needs at least two sweeps")
+    a_name, b_name = names[0], names[1]
+    by_point = {
+        name: {r.point: r for r in res.records}
+        for name, res in sweeps.items()
+    }
+    want = [tuple(int(x) for x in p) for p in points]
+    fastest_differs: List[BackendDisagreement] = []
+    anomaly_differs: List[BackendDisagreement] = []
+    n = 0
+    for p in want:
+        ra = by_point[a_name].get(p)
+        rb = by_point[b_name].get(p)
+        if ra is None or rb is None:
+            continue
+        n += 1
+        d = BackendDisagreement(
+            point=p,
+            fastest={a_name: ra.cls.fastest, b_name: rb.cls.fastest},
+            is_anomaly={a_name: ra.cls.is_anomaly,
+                        b_name: rb.cls.is_anomaly},
+            time_score={a_name: ra.cls.time_score,
+                        b_name: rb.cls.time_score},
+        )
+        if not (set(ra.cls.fastest) & set(rb.cls.fastest)):
+            fastest_differs.append(d)
+        if ra.cls.is_anomaly != rb.cls.is_anomaly:
+            anomaly_differs.append(d)
+    return BackendComparison(
+        spec_name=spec.name,
+        backends=(a_name, b_name),
+        n_points=n,
+        fastest_differs=fastest_differs,
+        anomaly_differs=anomaly_differs,
+        results=dict(sweeps),
+    )
 
 
 # ------------------------------------------------------------- clustering ---
@@ -750,11 +874,19 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "predict: classify from batched per-kernel "
                          "benchmarks (additive model, feeds the "
                          "calibration cache)")
-    ap.add_argument("--backend", choices=("blas", "jax"), default="blas")
+    ap.add_argument("--backend", choices=registered_backends(),
+                    default="blas",
+                    help="execution backend (repro.core.backends registry); "
+                         "each backend gets its own fingerprint-keyed atlas")
+    ap.add_argument("--compare-backends", default=None, metavar="A,B",
+                    help="sweep the grid on two backends and report "
+                         "instances where the fastest algorithm differs "
+                         "by backend (overrides --backend)")
     ap.add_argument("--shards", type=int, default=1,
-                    help="worker shards: for blas, >1 fans out over a "
-                         "process pool; for jax, the number of devices to "
-                         "use (0 = all devices)")
+                    help="worker shards: process-sharded backends "
+                         "(blas/numpy) fan out over a process pool; "
+                         "device-sharded backends (jax/pallas) use this "
+                         "many JAX devices (0 = all devices)")
     ap.add_argument("--threshold", type=float, default=0.10)
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--no-flush", action="store_true",
@@ -788,47 +920,31 @@ def main(argv: Optional[List[str]] = None) -> int:
         grid = GridSpec.uniform(values, spec.ndims)
     points = grid.points()
 
-    dtype = "float64" if args.backend == "blas" else "float32"
-    fp = current_fingerprint(backend=args.backend, dtype=dtype)
-    path = atlas_path(spec.name, fp, args.threshold, args.atlas_dir)
-    if args.fresh and path.is_file():
-        path.unlink()
-    atlas = AnomalyAtlas(path, fp, spec.name, args.threshold)
+    if args.compare_backends:
+        if args.mode != "measure":
+            # Comparison diffs *measured* atlases; silently degrading an
+            # explicit --mode predict into two full measured sweeps could
+            # cost hours of unrequested wall time on a dense grid.
+            ap.error("--compare-backends runs measured sweeps; it cannot "
+                     "be combined with --mode predict")
+        return _main_compare(args, spec, grid, points)
+
+    name = args.backend
+    atlas = _open_backend_atlas(spec, name, args)
 
     _note(f"sweep {spec.name} grid={grid.name} "
           f"({grid.n_points} instances over {spec.ndims} dims), "
-          f"backend={args.backend} shards={args.shards}", args.quiet)
-    _note(f"atlas: {path} ({len(atlas)} instances already recorded)",
+          f"backend={name} shards={args.shards}", args.quiet)
+    _note(f"atlas: {atlas.path} ({len(atlas)} instances already recorded)",
           args.quiet)
 
     if args.mode == "predict":
-        return _main_predict(args, spec, grid, points, atlas, dtype, fp)
+        return _main_predict(args, spec, grid, points, atlas,
+                             backend_default_dtype(name), atlas.fingerprint)
 
-    def progress(i, n, inst):
-        if not args.quiet and (i % 25 == 0 or i == n):
-            _note(f"  [{i}/{n}] {inst.point} "
-                  f"{'ANOMALY' if inst.cls.is_anomaly else 'ok'} "
-                  f"ts={inst.cls.time_score:.1%}", args.quiet)
+    res = _backend_sweep(spec, points, name, args, atlas)
 
-    kwargs = dict(threshold=args.threshold, atlas=atlas,
-                  max_instances=args.limit, reps=args.reps,
-                  progress=progress)
-    if args.backend == "jax":
-        res = sweep(spec, points, backend="jax",
-                    shards=args.shards or None,  # 0 = every device
-                    **kwargs)
-    elif args.shards > 1:
-        factory = functools.partial(BlasRunner, reps=args.reps,
-                                    flush_cache=not args.no_flush)
-        res = sweep(spec, points, backend="process", shards=args.shards,
-                    runner_factory=factory, **kwargs)
-    else:
-        res = sweep(spec, points,
-                    runner=BlasRunner(reps=args.reps,
-                                      flush_cache=not args.no_flush),
-                    **kwargs)
-
-    print(f"sweep {spec.name}/{grid.name}: points={res.n_points} "
+    print(f"sweep {spec.name}/{grid.name} [{name}]: points={res.n_points} "
           f"measured={res.n_measured} skipped={res.n_skipped} "
           f"anomalies={len(res.anomalies)} "
           f"({res.anomaly_rate:.1%}) in {res.wall_s:.1f}s "
@@ -839,13 +955,88 @@ def main(argv: Optional[List[str]] = None) -> int:
     return 0
 
 
+def _open_backend_atlas(spec, name, args) -> AnomalyAtlas:
+    """The per-backend atlas: fingerprinted by the registry key + dtype."""
+    fp = current_fingerprint(backend=name,
+                             dtype=backend_default_dtype(name))
+    path = atlas_path(spec.name, fp, args.threshold, args.atlas_dir)
+    if args.fresh and path.is_file():
+        path.unlink()
+    return AnomalyAtlas(path, fp, spec.name, args.threshold)
+
+
+def _backend_sweep(spec, points, name, args, atlas) -> SweepResult:
+    """One measured sweep on one registry backend, CLI-configured.
+
+    Fan-out follows the backend's declared ``shard_mode``: device-sharded
+    backends (jax/pallas) spread over JAX devices, process-sharded ones
+    (blas/numpy — GIL- and cache-bound) over a worker pool when
+    ``--shards`` asks for it.
+    """
+    def progress(i, n, inst):
+        if not args.quiet and (i % 25 == 0 or i == n):
+            _note(f"  [{name} {i}/{n}] {inst.point} "
+                  f"{'ANOMALY' if inst.cls.is_anomaly else 'ok'} "
+                  f"ts={inst.cls.time_score:.1%}", args.quiet)
+
+    kwargs = dict(threshold=args.threshold, atlas=atlas,
+                  max_instances=args.limit, reps=args.reps,
+                  progress=progress)
+    if backend_shard_mode(name) == "device":
+        return sweep(spec, points, backend="jax", exec_backend=name,
+                     shards=args.shards or None,  # 0 = every device
+                     **kwargs)
+    if args.shards > 1:
+        factory = functools.partial(make_backend, name, reps=args.reps,
+                                    flush_cache=not args.no_flush)
+        return sweep(spec, points, backend="process", shards=args.shards,
+                     runner_factory=factory, **kwargs)
+    return sweep(spec, points,
+                 runner=make_backend(name, reps=args.reps,
+                                     flush_cache=not args.no_flush),
+                 **kwargs)
+
+
+def _main_compare(args, spec, grid, points) -> int:
+    """--compare-backends A,B: sweep both, diff fastest sets + verdicts."""
+    names = [n.strip() for n in args.compare_backends.split(",") if
+             n.strip()]
+    if len(names) != 2 or names[0] == names[1]:
+        print(f"--compare-backends takes two distinct backend names, got "
+              f"{args.compare_backends!r}", file=sys.stderr)
+        return 2
+    for n in names:
+        if n not in registered_backends():
+            print(f"unknown backend {n!r}; registered: "
+                  f"{registered_backends()}", file=sys.stderr)
+            return 2
+    sweeps: Dict[str, SweepResult] = {}
+    for n in names:
+        atlas = _open_backend_atlas(spec, n, args)
+        _note(f"sweep {spec.name} grid={grid.name} backend={n} "
+              f"(atlas: {atlas.path}, {len(atlas)} recorded)", args.quiet)
+        sweeps[n] = _backend_sweep(spec, points, n, args, atlas)
+    cmp = compare_backends(spec, points, sweeps)
+    a, b = cmp.backends
+    print(f"compare {spec.name}/{grid.name} [{a} vs {b}]: "
+          f"points={cmp.n_points} "
+          f"fastest-differs={len(cmp.fastest_differs)} "
+          f"({cmp.fastest_differs_rate:.1%}) "
+          f"anomaly-verdict-differs={len(cmp.anomaly_differs)}")
+    for d in cmp.fastest_differs:
+        print(f"  {d.point}: {a} fastest={'/'.join(d.fastest[a])} "
+              f"(ts={d.time_score[a]:.1%}) | "
+              f"{b} fastest={'/'.join(d.fastest[b])} "
+              f"(ts={d.time_score[b]:.1%})")
+    for n in names:
+        print(f"atlas[{n}] written to {sweeps[n].atlas_path}")
+    return 0
+
+
 def _main_predict(args, spec, grid, points, atlas, dtype, fp) -> int:
     """--mode predict: batched kernel benchmarks → model-only sweep."""
-    if args.backend == "jax":
-        runner = JaxRunner(reps=args.reps, dtype=dtype)
-    else:
-        runner = BlasRunner(reps=args.reps,
-                            flush_cache=not args.no_flush)
+    runner = make_backend(args.backend, reps=args.reps, dtype=dtype,
+                          flush_cache=not args.no_flush)
     cached = load_default_profile(backend=args.backend, dtype=dtype)
     calls = collect_unique_calls(spec, points)
     t0 = _time.perf_counter()

@@ -197,10 +197,15 @@ class _NullRunner:
 @settings(max_examples=8, deadline=None)
 @given(name=st.sampled_from(sorted(REGISTRY)), seed=st.integers(0, 10 ** 6))
 def test_every_algorithm_of_every_family_is_numerically_identical(name, seed):
-    """The zoo's correctness gate: at random dims, every enumerated
-    algorithm of every registered expression equals the direct operand
-    product, through both the pure-numpy reference executor and the BLAS
-    executor (float64 tolerances)."""
+    """The zoo's correctness gate, now backend-wide (ISSUE 4): at random
+    dims, every enumerated algorithm of every registered expression, on
+    **every registered execution backend**, equals the direct operand
+    product. float64 backends (blas/numpy) are held to float64
+    tolerances; float32 backends (jax, and pallas in interpret mode on
+    this CPU container) to float32 tolerances scaled by the result
+    magnitude."""
+    from repro.core.backends import make_backend, registered_backends
+
     spec = REGISTRY[name]
     rng = np.random.default_rng(seed)
     point = tuple(int(rng.integers(4, 48)) for _ in range(spec.ndims))
@@ -212,13 +217,22 @@ def test_every_algorithm_of_every_family_is_numerically_identical(name, seed):
         for k, v in runner.make_operands(a).items():
             operands.setdefault(k, v)
     expected = spec.reference_value(point, operands)
+    scale = max(1.0, float(np.abs(expected).max()))
     for a in algos:
         np.testing.assert_allclose(
             reference_execute(a, operands), expected, rtol=1e-9, atol=1e-8,
             err_msg=f"{name} {a.name} (numpy reference)")
-        np.testing.assert_allclose(
-            runner.execute(a, operands), expected, rtol=1e-9, atol=1e-8,
-            err_msg=f"{name} {a.name} (BLAS)")
+    for backend_name in registered_backends():
+        be = make_backend(backend_name, reps=1, flush_cache=False,
+                          rng=np.random.default_rng(seed + 1))
+        ops = {k: be._asarray(np.asarray(v)) for k, v in operands.items()}
+        f64 = be.dtype == "float64"
+        rtol, atol = (1e-9, 1e-8) if f64 else (5e-4, 5e-4 * scale)
+        for a in algos:
+            np.testing.assert_allclose(
+                np.asarray(be.execute(a, ops)), expected,
+                rtol=rtol, atol=atol,
+                err_msg=f"{name} {a.name} ({backend_name})")
 
 
 def test_two_gram_pairs_mirror_each_consumed_triangle():

@@ -1,0 +1,74 @@
+#!/usr/bin/env python3
+"""Convert the benchmark CSV contract into a perf-trajectory JSON artifact.
+
+``python -m benchmarks.run`` prints ``name,us_per_call,derived`` rows to
+stdout; CI pipes them here to produce the ``BENCH_<n>.json`` artifact that
+seeds the repo's perf trajectory — one self-describing document per run,
+so regressions can be plotted across PRs without re-running anything.
+
+Usage::
+
+    python tools/bench_to_json.py bench.csv BENCH_4.json
+
+The converter is strict about the row shape (a malformed emit() should
+fail CI, not silently drop a metric) but tolerant of comment lines
+(``# ...``) and blank lines.
+"""
+
+from __future__ import annotations
+
+import json
+import platform
+import sys
+from datetime import datetime, timezone
+from pathlib import Path
+
+
+def parse_rows(text: str) -> list:
+    rows = []
+    for lineno, line in enumerate(text.splitlines(), 1):
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        parts = line.split(",", 2)
+        if len(parts) < 2:
+            raise SystemExit(
+                f"line {lineno}: expected 'name,us_per_call[,derived]', "
+                f"got {line!r}")
+        name, us = parts[0].strip(), parts[1].strip()
+        try:
+            us_val = float(us)
+        except ValueError:
+            raise SystemExit(
+                f"line {lineno}: us_per_call is not a number: {us!r}")
+        rows.append({
+            "name": name,
+            "us_per_call": us_val,
+            "derived": parts[2].strip() if len(parts) > 2 else "",
+        })
+    if not rows:
+        raise SystemExit("no benchmark rows found — did the run fail?")
+    return rows
+
+
+def main(argv) -> int:
+    if len(argv) != 3:
+        print(__doc__, file=sys.stderr)
+        return 2
+    src, dst = Path(argv[1]), Path(argv[2])
+    rows = parse_rows(src.read_text())
+    doc = {
+        "schema": 1,
+        "generated_utc": datetime.now(timezone.utc).isoformat(),
+        "host": {"machine": platform.machine(),
+                 "python": platform.python_version()},
+        "n_rows": len(rows),
+        "rows": rows,
+    }
+    dst.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+    print(f"wrote {dst} ({len(rows)} rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
