@@ -17,6 +17,7 @@ from pathlib import Path
 from repro.core import (
     GRAM_AATB,
     enumerate_algorithms,
+    get_discriminant,
     load_profile,
     select,
 )
@@ -80,7 +81,11 @@ def main() -> None:
         algos = enumerate_algorithms(GRAM_AATB.build(pt))
         picks = {}
         for disc in ("flops", "perfmodel", "hybrid"):
-            ranked = select(algos, discriminant=disc, profile=cached,
+            # select() now rejects a profile handed to a policy that never
+            # reads one; the capability flag says who gets the calibration.
+            prof = cached if get_discriminant(disc).requires_profile \
+                else None
+            ranked = select(algos, discriminant=disc, profile=prof,
                             dtype_bytes=8)
             picks[disc] = ranked[0].name
         if len(set(picks.values())) > 1:

@@ -1,0 +1,69 @@
+"""The discriminant scoreboard: replay atlas ground truth, score every
+registered selection policy.
+
+This is the paper's open question made into a perf-trajectory artifact:
+*which discriminant is best, and by how much?* A small AAᵀB grid is swept
+once into the persistent atlas (repeat runs resume, measuring nothing),
+the deduplicated kernel calls feed a measured table profile, and every
+policy in :mod:`repro.core.discriminants` is scored by replay — top-1
+accuracy, mean time regret, and (where the policy predicts times) anomaly
+recall — so `flops` vs `perfmodel` vs `rankk` quality is tracked across
+PRs next to the latency rows.
+
+Accuracy/regret rows carry ``unit=percent`` in their derived field;
+``tools/bench_to_json.py`` lands them in ``BENCH_<n>.json`` tagged with
+that unit.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import GRAM_AATB, benchmark_unique_calls, registered_discriminants
+from repro.core.evaluate import evaluate_discriminants
+from repro.core.sweep import collect_unique_calls, sweep
+
+from .common import FULL, emit, make_runner, note, open_atlas
+
+
+def main() -> None:
+    spec = GRAM_AATB
+    grid = spec.grid("small" if FULL else "smoke")
+    points = grid.points()
+    reps = 3 if FULL else 1
+    runner = make_runner(reps, flush_cache=FULL)
+
+    with open_atlas(spec.name, 0.10) as atlas:
+        res = sweep(spec, points, runner=runner, threshold=0.10,
+                    atlas=atlas)
+    note(f"\n== discriminant scoreboard ({spec.name}/{grid.name}: "
+         f"{res.n_points} instances, {res.n_measured} newly measured, "
+         f"{len(res.anomalies)} anomalies) ==")
+
+    # Arm the profile-consuming policies with measured per-kernel times
+    # (deduplicated; the calibration-cache feedback loop at bench scale).
+    profile, n_meas, n_reused = benchmark_unique_calls(
+        runner, collect_unique_calls(spec, points))
+    note(f"profile: {n_meas} kernel calls measured, {n_reused} reused")
+
+    t0 = time.perf_counter()
+    ev = evaluate_discriminants(spec, res.records,
+                                registered_discriminants(),
+                                profile=profile, threshold=0.10)
+    eval_s = time.perf_counter() - t0
+    note(ev.summary())
+
+    emit("disc_eval_replay", eval_s / max(1, ev.n_instances) * 1e6,
+         f"instances={ev.n_instances};"
+         f"discriminants={len(ev.scores)}")
+    for name, score in ev.scores.items():
+        derived = f"unit=percent;n={score.n_instances}"
+        if score.recall is not None:
+            derived += f";recall={score.recall:.3f}"
+        emit(f"disc_eval_{name}_top1", score.top1_accuracy * 100, derived)
+        emit(f"disc_eval_{name}_mean_regret", score.mean_regret * 100,
+             f"unit=percent;p95={score.p95_regret * 100:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -60,6 +60,7 @@ from .perfmodel import (
     HardwareSpec,
     HybridProfile,
     KernelProfile,
+    RooflineProfile,
     TableProfile,
     predict_algorithm_time,
 )
@@ -81,8 +82,15 @@ from .profile_store import (
     profile_path,
     save_profile,
 )
+from .discriminants import (
+    Discriminant,
+    DiscriminantContext,
+    get_discriminant,
+    register_discriminant,
+    registered_discriminants,
+)
 from .runners import BlasRunner, JaxRunner, measure_seconds, reference_execute
-from .selector import DISCRIMINANTS, as_hybrid, select, select_expression
+from .selector import as_hybrid, select, select_expression
 
 # Lazy (PEP 562) so `python -m repro.core.calibrate` / `python -m
 # repro.core.sweep` don't import their CLI modules twice (runpy warns when
@@ -117,6 +125,17 @@ _LAZY_EXPORTS = {
     "experiment2_regions": ".experiments",
     "experiment3_predict_from_benchmarks": ".experiments",
     "measure_instance": ".experiments",
+    # atlas-replay evaluation (imports sweep; lazy for the same reason)
+    "AtlasReplay": ".evaluate",
+    "DiscriminantScore": ".evaluate",
+    "EvaluationResult": ".evaluate",
+    "evaluate_atlas": ".evaluate",
+    "evaluate_discriminants": ".evaluate",
+    "load_atlas_records": ".evaluate",
+    # deprecated alias (selector.__getattr__ emits the DeprecationWarning
+    # at first *use*, not at package import — and it is deliberately NOT
+    # in __all__, so star-imports don't trigger it either)
+    "DISCRIMINANTS": ".selector",
 }
 
 
@@ -152,7 +171,8 @@ __all__ = [
     "KernelCall", "gemm", "kernel_flops", "symm", "syrk", "total_flops",
     "tri2full",
     "TPU_V5E", "AnalyticalTPUProfile", "HardwareSpec", "HybridProfile",
-    "KernelProfile", "TableProfile", "predict_algorithm_time",
+    "KernelProfile", "RooflineProfile", "TableProfile",
+    "predict_algorithm_time",
     "Plan", "Planner", "default_planner", "plan", "reset_default_planner",
     "resolve_profile",
     "GRIDS", "CalibrationResult", "sweep_kernels",
@@ -160,5 +180,9 @@ __all__ = [
     "current_fingerprint", "load_default_profile", "load_profile",
     "profile_path", "save_profile",
     "BlasRunner", "JaxRunner", "measure_seconds", "reference_execute",
-    "DISCRIMINANTS", "as_hybrid", "select", "select_expression",
+    "as_hybrid", "select", "select_expression",
+    "Discriminant", "DiscriminantContext", "get_discriminant",
+    "register_discriminant", "registered_discriminants",
+    "AtlasReplay", "DiscriminantScore", "EvaluationResult",
+    "evaluate_atlas", "evaluate_discriminants", "load_atlas_records",
 ]

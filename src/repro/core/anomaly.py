@@ -75,6 +75,21 @@ def classify(
     )
 
 
+def pick_regret(times: Mapping[str, float], pick: str) -> float:
+    """Relative time lost by choosing ``pick``: (T_pick − T_min) / T_min.
+
+    The per-instance unit of the evaluation scoreboard
+    (:mod:`repro.core.evaluate`): 0 when the pick is (tied-)fastest, 0.5
+    when it costs 50 % more wall time than the fastest algorithm. Returns
+    0 when the fastest time is 0 (degenerate clock resolution) — the same
+    zero-denominator convention as the severity scores above.
+    """
+    t_min = min(times.values())
+    if t_min <= 0:
+        return 0.0
+    return max(0.0, (float(times[pick]) - t_min) / t_min)
+
+
 @dataclasses.dataclass
 class RegionScan:
     """Result of traversing one axis-aligned line (paper Experiment 2)."""

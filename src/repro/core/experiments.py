@@ -35,9 +35,9 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .anomaly import Classification, ConfusionMatrix, RegionScan, classify, scan_line
+from .anomaly import Classification, ConfusionMatrix, RegionScan, scan_line
 from .backends import make_backend
-from .perfmodel import TableProfile, predict_algorithm_time
+from .perfmodel import TableProfile
 from .runners import BlasRunner
 from .sweep import (
     GRAM_AATB,
@@ -235,27 +235,31 @@ def experiment3_predict_from_benchmarks(
     ``profile`` (see :mod:`repro.core.profile_store`) to reuse prior
     calibrations: only calls it lacks are measured, and the entries added
     here flow back to the caller through the result.
+
+    Scoring is a thin configuration of the discriminant scoreboard
+    (:func:`repro.core.evaluate.evaluate_discriminants`): the experiment
+    *is* "evaluate the ``perfmodel`` discriminant, armed with the benched
+    table, against measured ground truth" — the confusion matrix returned
+    here is that evaluation's, so the paper harness and ``--mode
+    evaluate`` can never disagree about what recall/precision mean.
     """
+    from .evaluate import evaluate_discriminants
+
     if isinstance(runner, str):
         runner = make_backend(runner)
     if profile is None:
         profile = TableProfile(peak_flops=peak_flops)
-    cm = ConfusionMatrix()
 
     # 1. Benchmark the deduplicated call set (batched; reuses the cache).
     calls = collect_unique_calls(spec, classified)
     profile, n_meas, n_reused = benchmark_unique_calls(
         runner, calls, profile=profile)
 
-    # 2. Predict per instance; compare with measured classification.
-    for point, inst in classified.items():
-        algos = spec.algorithms(point)
-        pred_times = {a.name: predict_algorithm_time(a.calls, profile)
-                      for a in algos}
-        flops = {a.name: a.flops for a in algos}
-        predicted = classify(pred_times, flops, threshold=threshold)
-        actual = classify(inst.times, flops, threshold=threshold)
-        cm.add(actual.is_anomaly, predicted.is_anomaly)
+    # 2. Score the additive model through the shared evaluation path.
+    res = evaluate_discriminants(
+        spec, list(classified.values()), ["perfmodel"],
+        profile=profile, threshold=threshold, dtype_bytes=8)
+    cm = res.scores["perfmodel"].confusion
 
     return Experiment3Result(spec.name, cm, profile,
                              n_calls_measured=n_meas,

@@ -199,6 +199,24 @@ def registered_names() -> List[str]:
     return sorted(REGISTRY)
 
 
+def find_spec(name: str) -> ExpressionSpec:
+    """Resolve a CLI key *or* a spec's atlas label (``spec.name``).
+
+    Atlas headers record ``spec.name`` (``"AATB"``), while the CLI speaks
+    registry keys (``"aatb"``); replay tooling
+    (:mod:`repro.core.evaluate`) accepts either spelling.
+    """
+    key = name.lower()
+    if key in REGISTRY:
+        return REGISTRY[key]
+    for spec in REGISTRY.values():
+        if spec.name.lower() == key:
+            return spec
+    raise KeyError(
+        f"no registered expression matches {name!r} (by CLI key or spec "
+        f"name); registered: {sorted(REGISTRY)}")
+
+
 # ----------------------------------------------------- the shipped zoo ------
 # Builders are module-level so specs pickle across the process pool.
 

@@ -133,6 +133,32 @@ class AnalyticalTPUProfile(KernelProfile):
         return max(comp, mem) + hw.kernel_overhead_s
 
 
+class RooflineProfile(KernelProfile):
+    """Pure roofline: ``max(flops / peak, bytes·dtype / bandwidth)``.
+
+    The minimal memory-traffic-aware model, and deliberately *simpler*
+    than :class:`AnalyticalTPUProfile`: no MXU tile quantization and no
+    per-call dispatch overhead, so the two analytical models disagree
+    exactly where quantization cliffs (a 129-row GEMM paying for 256)
+    dominate raw traffic. What it does see that FLOPs cannot: the
+    zero-FLOP TRI2FULL copy costs ``m²`` bytes of traffic, and SYRK's
+    triangular output halves its write traffic — the asymmetries behind
+    the paper's anomalies. Backs the ``roofline`` discriminant
+    (:mod:`repro.core.discriminants`).
+    """
+
+    def __init__(self, hw: HardwareSpec = TPU_V5E):
+        self.hw = hw
+
+    def peak(self) -> float:
+        return self.hw.peak_flops
+
+    def time(self, call: KernelCall, dtype_bytes: int = 2) -> float:
+        comp = call.flops / self.hw.peak_flops
+        mem = call.bytes_moved * dtype_bytes / self.hw.hbm_bw
+        return max(comp, mem)
+
+
 class TableProfile(KernelProfile):
     """Benchmarked per-call times (paper's Experiment 3 data structure).
 

@@ -46,7 +46,8 @@ from .profile_store import (
     load_default_profile,
     save_profile,
 )
-from .selector import as_hybrid, select
+from .discriminants import as_hybrid, get_discriminant
+from .selector import select
 
 
 @dataclasses.dataclass
@@ -137,6 +138,14 @@ class Planner:
             profile_dtype = run_dtype if record else "float64"
         self.profile_backend = profile_backend
         self.profile_dtype = profile_dtype
+        # Any repro.core.discriminants registry key works; resolving at
+        # construction surfaces typos before the first plan() call, and
+        # the policy's capability flags drive both which arguments select
+        # receives and whether profile refinement invalidates memos.
+        try:
+            self._policy = get_discriminant(discriminant)
+        except KeyError as e:
+            raise ValueError(str(e)) from None
         self.discriminant = discriminant
         self.profile = resolve_profile(profile, backend=profile_backend,
                                        dtype=profile_dtype)
@@ -155,7 +164,11 @@ class Planner:
             (type(op).__name__, getattr(op, "symmetric", False))
             for op in c.ops
         )
-        return (struct, dims, self.discriminant)
+        # The policy's fingerprint (not just its registry key): a
+        # parametrized discriminant (rankk's measurement budget k) folds
+        # its parameters in, so two planners sharing a cache through the
+        # module-level plan() helpers can never alias distinct policies.
+        return (struct, dims, self._policy.fingerprint())
 
     def _profile_generation(self) -> int:
         """Mutation counter of the live table profile (−1: no table).
@@ -164,12 +177,13 @@ class Planner:
         planner re-rank after online refinement: without it, the first
         plan per shape was frozen forever even when heavy refinement had
         flipped the ranking (ISSUE 4 satellite). Discriminants whose
-        ranking does not read the profile (``flops`` is pure arithmetic;
-        ``measured`` re-times on hardware) pin the generation — otherwise
-        every observe() would force a provably identical re-enumeration
-        (or, for ``measured``, a fresh wall-clock timing sweep) per call.
+        ranking does not read the profile (``requires_profile=False``:
+        ``flops``/``roofline`` are pure arithmetic; ``measured`` re-times
+        on hardware) pin the generation — otherwise every observe() would
+        force a provably identical re-enumeration (or, for ``measured``,
+        a fresh wall-clock timing sweep) per call.
         """
-        if self.discriminant in ("flops", "measured"):
+        if not self._policy.requires_profile:
             return -1
         table = self._recording_table()
         return table.generation if table is not None else -1
@@ -182,8 +196,14 @@ class Planner:
         if hit is not None and hit[0] == gen:
             return hit[1]
         algos = enumerate_algorithms(c, env)
-        ranked = select(algos, self.discriminant, profile=self.profile,
-                        dtype_bytes=self.dtype_bytes)
+        # Capability-gated arguments: a profile handed to a policy that
+        # never reads one (flops/measured/roofline) is a select() error
+        # now, and the planner always *has* a resolved profile — so only
+        # forward it where it is meaningful.
+        ranked = select(
+            algos, self.discriminant,
+            profile=self.profile if self._policy.requires_profile else None,
+            dtype_bytes=self.dtype_bytes)
         best = ranked[0]
         plan = Plan(
             algorithm=best,

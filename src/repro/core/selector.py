@@ -1,40 +1,43 @@
-"""Algorithm discriminants — the selection policies the paper evaluates.
+"""Selection façade over the discriminant registry.
 
-* ``flops``     — paper-faithful baseline: min FLOP count (Linnea/Julia).
-* ``perfmodel`` — FLOPs weighted by kernel performance profiles (the paper's
-  conclusion, productized; Experiment 3 shows it predicts 75–92 % of the
-  anomalies the baseline falls into).
-* ``hybrid``    — measured table entries where a calibration has them,
-  analytical model per-call elsewhere (the paper's conjectured
-  FLOPs × perf-model combination; see :class:`~repro.core.perfmodel
-  .HybridProfile`).
-* ``measured``  — brute-force empirical selection (ground truth; only
-  feasible when sizes are concrete and measurement is affordable).
+The policies themselves live in :mod:`repro.core.discriminants` — a
+registry (``register_discriminant`` / ``get_discriminant`` /
+``registered_discriminants``) shipping ``flops``, ``perfmodel``,
+``hybrid``, ``roofline``, ``measured`` and ``rankk``, each declaring the
+capability flags (``requires_profile`` / ``requires_measurement``) this
+shim validates arguments against. ``select`` returns a ranked list so
+callers can implement fallbacks; the planner takes rank 0.
 
-``select`` returns a ranked list so callers can implement fallbacks; the
-planner takes rank 0.
+The pre-registry module-level ``DISCRIMINANTS`` tuple is deprecated:
+import :func:`~repro.core.discriminants.registered_discriminants`
+instead (the alias still resolves, with a ``DeprecationWarning``).
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+import warnings
+from typing import List, Optional, Sequence
 
 from .algorithms import Algorithm
-from .backends import get_backend
-from .perfmodel import (
-    AnalyticalTPUProfile,
-    HybridProfile,
-    KernelProfile,
-    TableProfile,
-    predict_algorithm_time,
+from .discriminants import (
+    DiscriminantContext,
+    as_hybrid,
+    get_discriminant,
+    registered_discriminants,
+    validate_arguments,
 )
+from .perfmodel import KernelProfile
 
-DISCRIMINANTS = ("flops", "perfmodel", "hybrid", "measured")
+__all__ = [
+    "as_hybrid", "rank_by_flops", "rank_by_perfmodel", "rank_by_hybrid",
+    "rank_by_measurement", "registered_discriminants", "select",
+    "select_expression",
+]
 
 
 def rank_by_flops(algos: Sequence[Algorithm]) -> List[Algorithm]:
     """Ascending FLOP count, ties broken by name (deterministic)."""
-    return sorted(algos, key=lambda a: (a.flops, a.name))
+    return get_discriminant("flops").rank(algos, DiscriminantContext())
 
 
 def rank_by_perfmodel(
@@ -46,36 +49,12 @@ def rank_by_perfmodel(
 
     ``profile`` is used *as given* (no hybrid coercion — contrast
     :func:`rank_by_hybrid`); ``None`` falls back to the closed-form
-    :class:`~repro.core.perfmodel.AnalyticalTPUProfile`. A bare
-    :class:`~repro.core.perfmodel.TableProfile` may therefore raise
+    analytical model. A bare partially calibrated table may raise
     ``KeyError`` on kernel kinds it has never seen — pass it through the
-    ``hybrid`` discriminant if the calibration may be partial. FLOPs and
-    name break prediction ties, keeping rankings deterministic.
+    ``hybrid`` discriminant if the calibration may be partial.
     """
-    prof = profile or AnalyticalTPUProfile()
-    return sorted(
-        algos,
-        key=lambda a: (predict_algorithm_time(a.calls, prof, dtype_bytes),
-                       a.flops, a.name),
-    )
-
-
-def as_hybrid(profile: Optional[KernelProfile]) -> HybridProfile:
-    """Coerce any profile into the hybrid (table ∨ analytical) policy.
-
-    * ``HybridProfile``   → used as-is;
-    * ``TableProfile``    → wrapped with an analytical fallback;
-    * anything else/None  → empty table over the given (or default)
-      analytical model, so every call falls through to analytical until
-      online refinement records measurements.
-    """
-    if isinstance(profile, HybridProfile):
-        return profile
-    if isinstance(profile, TableProfile):
-        return HybridProfile(profile)
-    analytical = profile or AnalyticalTPUProfile()
-    return HybridProfile(TableProfile(peak_flops=analytical.peak()),
-                         analytical=analytical)
+    return get_discriminant("perfmodel").rank(
+        algos, DiscriminantContext(profile=profile, dtype_bytes=dtype_bytes))
 
 
 def rank_by_hybrid(
@@ -83,7 +62,8 @@ def rank_by_hybrid(
     profile: Optional[KernelProfile] = None,
     dtype_bytes: int = 2,
 ) -> List[Algorithm]:
-    return rank_by_perfmodel(algos, as_hybrid(profile), dtype_bytes)
+    return get_discriminant("hybrid").rank(
+        algos, DiscriminantContext(profile=profile, dtype_bytes=dtype_bytes))
 
 
 def rank_by_measurement(
@@ -94,19 +74,16 @@ def rank_by_measurement(
     """Ascending measured time on any registered execution backend.
 
     ``runner`` is an explicit backend instance; ``backend`` is a registry
-    name (``blas``/``numpy``/``jax``/``pallas``/…) resolved through
-    :func:`~repro.core.backends.get_backend`. Passing both raises —
-    silently preferring one would measure on an unintended executor.
-    Default: a fresh ``blas`` runner (the paper's ground-truth protocol).
+    name (``blas``/``numpy``/``jax``/``pallas``/…). Passing both raises.
+    Default: the process-shared ``blas`` runner (the paper's ground-truth
+    protocol; the shared instance keeps its 64 MB cache-flush buffer warm
+    across calls). Kernel calls shared between algorithms are timed once
+    (deduplicated unique-call benching) rather than per algorithm.
     """
     if runner is not None and backend is not None:
         raise ValueError("pass either runner= or backend=, not both")
-    r = runner if runner is not None else get_backend(backend or "blas",
-                                                     reps=3)
-    times: Dict[str, float] = {}
-    for a in algos:
-        times[a.name] = r.time_algorithm(a)
-    return sorted(algos, key=lambda a: (times[a.name], a.name))
+    return get_discriminant("measured").rank(
+        algos, DiscriminantContext(runner=runner, backend=backend))
 
 
 def select(
@@ -117,35 +94,26 @@ def select(
     dtype_bytes: int = 2,
     backend: Optional[str] = None,
 ) -> List[Algorithm]:
-    """Rank ``algos`` best-first under the chosen discriminant.
+    """Rank ``algos`` best-first under any registered discriminant.
 
-    How the optional ``profile`` is interpreted depends on the
-    discriminant:
-
-    * ``flops``     — ignored (pure FLOP count).
-    * ``perfmodel`` — used verbatim; ``None`` means the analytical model.
-    * ``hybrid``    — coerced through :func:`as_hybrid` (measured table
-      entries where a calibration has them — exactly or by near
-      nearest-neighbour — analytical fallback elsewhere), so partial
-      calibrations still rank every candidate.
-    * ``measured``  — ignored; ``runner`` (an execution-backend instance)
-      or ``backend`` (a :mod:`repro.core.backends` registry name —
-      ``blas``/``numpy``/``jax``/``pallas``/…) times each algorithm;
-      default a fresh ``blas`` runner.
-
-    This is the single entry point the planner uses; it takes rank 0 of
-    the returned list.
+    ``discriminant`` is a :mod:`repro.core.discriminants` registry key;
+    arguments are validated against the policy's capability flags, so a
+    ``profile`` handed to ``flops``/``measured``/``roofline`` or a
+    ``runner``/``backend`` handed to a policy that never executes kernels
+    raises ``ValueError`` instead of being silently ignored. This is the
+    single entry point the planner uses; it takes rank 0 of the returned
+    list.
     """
-    if discriminant == "flops":
-        return rank_by_flops(algos)
-    if discriminant == "perfmodel":
-        return rank_by_perfmodel(algos, profile, dtype_bytes)
-    if discriminant == "hybrid":
-        return rank_by_hybrid(algos, profile, dtype_bytes)
-    if discriminant == "measured":
-        return rank_by_measurement(algos, runner, backend=backend)
-    raise ValueError(
-        f"unknown discriminant {discriminant!r}; expected {DISCRIMINANTS}")
+    try:
+        d = get_discriminant(discriminant)
+    except KeyError:
+        raise ValueError(
+            f"unknown discriminant {discriminant!r}; expected one of "
+            f"{registered_discriminants()}") from None
+    validate_arguments(d, profile=profile, runner=runner, backend=backend)
+    ctx = DiscriminantContext(profile=profile, runner=runner,
+                              backend=backend, dtype_bytes=dtype_bytes)
+    return d.rank(algos, ctx)
 
 
 def select_expression(
@@ -161,13 +129,28 @@ def select_expression(
 
     ``expr`` is a registry CLI name (``abcd``, ``aatb``, ``abtb``, …, see
     :mod:`repro.core.expressions`); enumeration and ranking both flow from
-    the registry entry, so newly registered families are selectable with
-    no further wiring. With ``discriminant="measured"``, ``backend``
-    names the execution backend to time on — any registry entry works,
-    so a family can be ranked on MKL-style BLAS and on Pallas with the
-    same call.
+    the registries, so newly registered families and newly registered
+    discriminants are selectable with no further wiring. With a
+    measurement-backed discriminant (``measured``/``rankk``), ``backend``
+    names the execution backend to time on.
     """
     from .expressions import get_spec
     return select(get_spec(expr).algorithms(point), discriminant,
                   profile=profile, runner=runner, dtype_bytes=dtype_bytes,
                   backend=backend)
+
+
+_DEPRECATED = {
+    "DISCRIMINANTS": lambda: tuple(registered_discriminants()),
+}
+
+
+def __getattr__(name):
+    hook = _DEPRECATED.get(name)
+    if hook is not None:
+        warnings.warn(
+            f"selector.{name} is deprecated; call "
+            f"repro.core.discriminants.registered_discriminants() instead",
+            DeprecationWarning, stacklevel=2)
+        return hook()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

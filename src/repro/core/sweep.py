@@ -868,12 +868,19 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help=f"named grid {sorted(SWEEP_GRIDS)} (per-family "
                          "axis overrides apply) or comma-separated axis "
                          "values, e.g. 64,128,256")
-    ap.add_argument("--mode", choices=("measure", "predict"),
+    ap.add_argument("--mode", choices=("measure", "predict", "evaluate"),
                     default="measure",
                     help="measure: time every algorithm per instance; "
                          "predict: classify from batched per-kernel "
                          "benchmarks (additive model, feeds the "
-                         "calibration cache)")
+                         "calibration cache); evaluate: replay the "
+                         "persisted atlas and score discriminants "
+                         "(top-1 accuracy, time regret, anomaly "
+                         "recall/precision) without re-measuring")
+    ap.add_argument("--discriminants", default=None, metavar="A,B,C",
+                    help="comma-separated repro.core.discriminants "
+                         "registry keys to score in --mode evaluate "
+                         "(default: every registered discriminant)")
     ap.add_argument("--backend", choices=registered_backends(),
                     default="blas",
                     help="execution backend (repro.core.backends registry); "
@@ -920,6 +927,11 @@ def main(argv: Optional[List[str]] = None) -> int:
         grid = GridSpec.uniform(values, spec.ndims)
     points = grid.points()
 
+    if args.discriminants and args.mode != "evaluate":
+        # Scoring is a replay-only concern; silently accepting the flag
+        # on a measured sweep would imply the sweep was somehow filtered.
+        ap.error("--discriminants only applies to --mode evaluate")
+
     if args.compare_backends:
         if args.mode != "measure":
             # Comparison diffs *measured* atlases; silently degrading an
@@ -930,6 +942,10 @@ def main(argv: Optional[List[str]] = None) -> int:
         return _main_compare(args, spec, grid, points)
 
     name = args.backend
+
+    if args.mode == "evaluate":
+        return _main_evaluate(args, spec, grid, points)
+
     atlas = _open_backend_atlas(spec, name, args)
 
     _note(f"sweep {spec.name} grid={grid.name} "
@@ -1065,6 +1081,102 @@ def _main_predict(args, spec, grid, points, atlas, dtype, fp) -> int:
         if cm.total:
             print(f"vs atlas ground truth ({cm.total} instances): "
                   f"recall={cm.recall:.1%} precision={cm.precision:.1%}")
+    return 0
+
+
+def _main_evaluate(args, spec, grid, points) -> int:
+    """--mode evaluate: replay the atlas, score discriminants, no timing.
+
+    The atlas is loaded through the *lenient* replay loader
+    (:func:`repro.core.evaluate.load_atlas_records`): evaluation never
+    appends, so fingerprints are not matched against this process and
+    legacy pre-backend-registry headers are normalized instead of
+    rejected. If the fingerprint-exact file is absent but exactly one
+    atlas for this (spec, threshold) exists — e.g. ground truth swept on
+    another machine, or under a legacy fingerprint — that one is used,
+    with a note.
+    """
+    from .discriminants import registered_discriminants
+    from .evaluate import evaluate_discriminants, load_atlas_records
+
+    if args.discriminants:
+        names = [n.strip() for n in args.discriminants.split(",")
+                 if n.strip()]
+        unknown = [n for n in names if n.lower()
+                   not in registered_discriminants()]
+        if unknown:
+            print(f"unknown discriminant(s) {unknown}; registered: "
+                  f"{registered_discriminants()}", file=sys.stderr)
+            return 2
+    else:
+        names = registered_discriminants()
+
+    fp = current_fingerprint(backend=args.backend,
+                             dtype=backend_default_dtype(args.backend))
+    path = atlas_path(spec.name, fp, args.threshold, args.atlas_dir)
+    if not path.is_file():
+        t = f"{args.threshold:g}".replace(".", "p")
+        candidates = sorted(path.parent.glob(
+            f"atlas-{_slug(spec.name)}-t{t}-*.jsonl"))
+        if len(candidates) == 1:
+            _note(f"no atlas for this fingerprint; evaluating the only "
+                  f"match {candidates[0].name}", args.quiet)
+            path = candidates[0]
+        else:
+            hint = (f"{len(candidates)} atlases match this spec/threshold"
+                    if candidates else "none exist")
+            print(f"no atlas at {path} ({hint}); sweep ground truth first: "
+                  f"python -m repro.core.sweep --expr {args.expr} --grid "
+                  f"{args.grid} --backend {args.backend}", file=sys.stderr)
+            return 2
+
+    replay = load_atlas_records(path)
+    want = {tuple(int(x) for x in p) for p in points}
+    records = [r for r in replay.records if r.point in want]
+    if not records:
+        # Grid mismatch (or a random-search atlas): score what exists
+        # rather than erroring — the atlas is the ground truth we have.
+        _note(f"no atlas records on grid {grid.name}; evaluating all "
+              f"{len(replay.records)} recorded instances", args.quiet)
+        records = replay.records
+    if not records:
+        print(f"atlas {path} holds no instances", file=sys.stderr)
+        return 2
+
+    dtype = backend_default_dtype(args.backend)
+    profile = load_default_profile(backend=args.backend, dtype=dtype)
+    try:
+        res = evaluate_discriminants(
+            spec, records, [n.lower() for n in names], profile=profile,
+            threshold=args.threshold,
+            dtype_bytes=8 if dtype == "float64" else 4)
+    except ValueError as e:
+        # Record-level defect (atlas swept under a different enumeration):
+        # every row would be wrong, so the evaluation itself fails.
+        print(f"evaluation failed: {e}", file=sys.stderr)
+        return 1
+    rows = []
+    for score in res.scores.values():
+        row = score.row()
+        if score.error is not None and score.error.startswith("KeyError"):
+            # The documented partial-calibration failure mode; other
+            # errors get no hint — switching discriminants won't fix them.
+            row += " (hint: `hybrid` tolerates partial calibrations)"
+        rows.append(row)
+    if all(s.error is not None for s in res.scores.values()):
+        print("every requested discriminant failed to evaluate:",
+              file=sys.stderr)
+        for row in rows:
+            print("  " + row, file=sys.stderr)
+        return 1
+    legacy = " legacy-fingerprint" if replay.legacy else ""
+    print(f"evaluate {spec.name}/{grid.name} [{args.backend}]: "
+          f"instances={res.n_instances} anomalies={res.n_anomalies} "
+          f"profile={'cached' if profile is not None else 'analytical'}"
+          f"{legacy}")
+    for row in rows:
+        print("  " + row)
+    print(f"atlas read from {path}")
     return 0
 
 

@@ -1,0 +1,609 @@
+"""Discriminant registry + atlas-replay evaluation (ISSUE 5).
+
+Covers: the registry protocol and capability flags, the selector shim's
+argument validation, deduplicated measurement ranking, the new
+``roofline``/``rankk`` policies, the evaluation scoreboard (top-1
+accuracy / time regret / anomaly recall-precision), legacy-atlas
+normalization, and the `anomaly.classify` edge cases the scoreboard's
+metrics lean on.
+"""
+
+from __future__ import annotations
+
+import warnings
+from pathlib import Path
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import classify
+from repro.core.anomaly import pick_regret
+from repro.core.discriminants import (
+    _REGISTRY,
+    Discriminant,
+    DiscriminantContext,
+    RankKDiscriminant,
+    get_discriminant,
+    register_discriminant,
+    registered_discriminants,
+    shared_runner,
+    validate_arguments,
+)
+from repro.core.expressions import GRAM_AATB, find_spec
+from repro.core.perfmodel import RooflineProfile, TableProfile
+from repro.core.selector import rank_by_measurement, select
+from repro.core.sweep import Instance
+
+FIXTURES = Path(__file__).parent / "fixtures"
+
+POINT = (16, 8, 12)
+
+
+def _algos():
+    return GRAM_AATB.algorithms(POINT)
+
+
+class _CountingRunner:
+    """Stub execution backend: records every isolated kernel benchmark."""
+
+    def __init__(self):
+        self.benched = []
+
+    def benchmark_call(self, call, reps=None):
+        self.benched.append((call.kind, call.dims))
+        # Deterministic, flops-monotone fake seconds (plus a constant so
+        # zero-FLOP tri2full still costs time).
+        return 1e-9 * call.flops + 1e-6
+
+
+# ------------------------------------------------------------- registry ----
+
+
+def test_registry_ships_six_policies():
+    names = registered_discriminants()
+    assert {"flops", "perfmodel", "hybrid", "roofline", "measured",
+            "rankk"} <= set(names)
+    assert len(names) >= 6
+
+
+def test_capability_flags():
+    assert not get_discriminant("flops").requires_profile
+    assert not get_discriminant("flops").requires_measurement
+    assert get_discriminant("perfmodel").requires_profile
+    assert not get_discriminant("perfmodel").requires_measurement
+    assert not get_discriminant("roofline").requires_profile
+    assert get_discriminant("measured").requires_measurement
+    d = get_discriminant("rankk")
+    assert d.requires_profile and d.requires_measurement
+
+
+def test_get_unknown_discriminant_lists_registry():
+    with pytest.raises(KeyError, match="registered"):
+        get_discriminant("nope")
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        register_discriminant(RankKDiscriminant(), name="flops")
+
+
+def test_register_custom_discriminant_recipe():
+    """The docs' recipe: a policy registered once is selectable by name."""
+
+    class Antimodel(Discriminant):
+        name = "antimodel"
+
+        def predict_times(self, algos, ctx):
+            return {a.name: -float(a.flops) for a in algos}
+
+    register_discriminant(Antimodel())
+    try:
+        ranked = select(_algos(), "antimodel")
+        assert ranked[0].flops == max(a.flops for a in _algos())
+        assert ranked[-1].flops == min(a.flops for a in _algos())
+        assert "antimodel" in registered_discriminants()
+    finally:
+        _REGISTRY.pop("antimodel")
+
+
+def test_discriminants_tuple_deprecated():
+    import repro.core.selector as selector
+
+    with pytest.warns(DeprecationWarning, match="registered_discriminants"):
+        legacy = selector.DISCRIMINANTS
+    assert set(legacy) == set(registered_discriminants())
+
+
+# ------------------------------------------- capability-flag validation ----
+
+
+def test_select_rejects_profile_for_profile_free_policies():
+    prof = TableProfile(1e11)
+    for disc in ("flops", "measured", "roofline"):
+        with pytest.raises(ValueError, match="requires_profile"):
+            select(_algos(), disc, profile=prof)
+
+
+def test_select_rejects_runner_for_measurement_free_policies():
+    for disc in ("flops", "perfmodel", "hybrid", "roofline"):
+        with pytest.raises(ValueError, match="requires_measurement"):
+            select(_algos(), disc, backend="numpy")
+    with pytest.raises(ValueError, match="requires_measurement"):
+        select(_algos(), "perfmodel", runner=_CountingRunner())
+
+
+def test_select_rejects_runner_and_backend_together():
+    with pytest.raises(ValueError, match="not both"):
+        select(_algos(), "measured", runner=_CountingRunner(),
+               backend="numpy")
+    with pytest.raises(ValueError, match="not both"):
+        validate_arguments(get_discriminant("measured"),
+                           runner=_CountingRunner(), backend="numpy")
+
+
+def test_select_unknown_discriminant_is_value_error():
+    with pytest.raises(ValueError, match="unknown discriminant"):
+        select(_algos(), "nope")
+
+
+# ------------------------------------------------ measurement + rankk ------
+
+
+def test_rank_by_measurement_dedups_shared_calls():
+    """Shared kernel prefixes are benchmarked once, not per algorithm."""
+    runner = _CountingRunner()
+    ranked = rank_by_measurement(_algos(), runner=runner)
+    assert {a.name for a in ranked} == {a.name for a in _algos()}
+    # every distinct (kind, dims) at most once...
+    assert len(runner.benched) == len(set(runner.benched))
+    # ...and strictly fewer benchmarks than the naive per-algorithm stream
+    naive = sum(len(a.calls) for a in _algos())
+    assert len(runner.benched) < naive
+
+
+def test_shared_default_runner_is_cached():
+    assert shared_runner("numpy") is shared_runner("numpy")
+
+
+def test_rankk_times_only_top_k_flops_candidates():
+    runner = _CountingRunner()
+    k = 2
+    d = RankKDiscriminant(k=k)
+    ctx = DiscriminantContext(runner=runner)
+    ranked = d.rank(_algos(), ctx)
+    assert {a.name for a in ranked} == {a.name for a in _algos()}
+    top = sorted(_algos(), key=lambda a: (a.flops, a.name))[:k]
+    budget = {(c.kind, c.dims) for a in top for c in a.calls}
+    assert set(runner.benched) == budget
+
+
+def test_rankk_fingerprint_carries_budget():
+    assert RankKDiscriminant(k=5).fingerprint() == "rankk(k=5)"
+    with pytest.raises(ValueError, match="k >= 1"):
+        RankKDiscriminant(k=0)
+
+
+def test_roofline_is_distinct_from_perfmodel():
+    """Pure-traffic roofline and the MXU-quantized model must be able to
+    disagree — otherwise the registry entry adds nothing."""
+    roof = select(_algos(), "roofline")
+    prof = RooflineProfile()
+    # roofline charges the zero-FLOP tri2full copy for its traffic
+    from repro.core.flops import tri2full
+    assert prof.time(tri2full(512), dtype_bytes=8) > 0
+    assert [a.name for a in roof] == [a.name for a in select(
+        _algos(), "roofline")]  # deterministic
+
+
+# ----------------------------------------------------------- planner -------
+
+
+def test_planner_rejects_unknown_discriminant_at_construction():
+    from repro.core.planner import Planner
+
+    with pytest.raises(ValueError, match="unknown discriminant"):
+        Planner(discriminant="nope", backend="numpy")
+
+
+def test_planner_accepts_any_registry_key_and_pins_profile_free_memo():
+    from repro.core.expr import gram_times
+    from repro.core.planner import Planner
+
+    planner = Planner(discriminant="roofline", backend="numpy",
+                      profile=TableProfile(1e11), record=True)
+    c = gram_times(24, 16, 8)
+    plan1 = planner.plan(c)
+    planner.observe(plan1, seconds=0.1)  # bumps the table generation
+    # roofline never reads the profile: the memo slot must survive
+    assert planner.plan(c) is plan1
+
+
+def test_planner_memo_keyed_by_policy_fingerprint():
+    from repro.core.expr import gram_times
+    from repro.core.planner import Planner
+
+    p = Planner(discriminant="rankk", backend="numpy")
+    key = p._key(gram_times(24, 16, 8), None)
+    assert key[-1] == "rankk(k=3)"
+
+
+# ------------------------------------------------- classify edge cases -----
+
+
+def test_classify_all_tied_times_is_never_anomalous():
+    times = {"a": 1.0, "b": 1.0, "c": 1.0}
+    flops = {"a": 10, "b": 20, "c": 30}
+    cls = classify(times, flops, threshold=0.0)
+    assert cls.fastest == ("a", "b", "c")
+    assert not cls.is_anomaly and cls.time_score == 0.0
+
+
+def test_classify_rel_tol_boundary_membership():
+    times = {"a": 1.0, "b": 1.0 + 5e-10, "c": 1.1}
+    flops = {"a": 2, "b": 1, "c": 1}
+    cls = classify(times, flops, rel_tol=1e-9)
+    assert "b" in cls.fastest          # within the tie tolerance
+    assert "c" not in cls.fastest
+    # b is both cheapest and (tied-)fastest -> no anomaly
+    assert not cls.is_anomaly
+
+
+def test_classify_zero_time_denominator():
+    times = {"a": 0.0, "b": 0.0}
+    flops = {"a": 5, "b": 1}
+    cls = classify(times, flops)
+    assert cls.time_score == 0.0 and not cls.is_anomaly
+
+
+def test_classify_zero_flop_denominator():
+    times = {"a": 2.0, "b": 1.0}
+    flops = {"a": 0, "b": 0}
+    cls = classify(times, flops, threshold=0.0)
+    assert cls.flop_score == 0.0
+    # both are FLOP-cheapest, so the sets intersect: no anomaly
+    assert not cls.is_anomaly
+
+
+def test_classify_threshold_exactly_met_is_not_anomaly():
+    # (1.0 - 0.875) / 1.0 == 0.125 exactly in binary floating point
+    times = {"cheap": 1.0, "fast": 0.875}
+    flops = {"cheap": 1, "fast": 2}
+    at = classify(times, flops, threshold=0.125)
+    assert at.time_score == 0.125 and not at.is_anomaly
+    below = classify(times, flops, threshold=0.124)
+    assert below.is_anomaly
+
+
+def test_pick_regret():
+    times = {"a": 2.0, "b": 1.0}
+    assert pick_regret(times, "a") == 1.0
+    assert pick_regret(times, "b") == 0.0
+    assert pick_regret({"a": 0.0, "b": 0.0}, "a") == 0.0
+
+
+# ------------------------------------------------------- evaluation --------
+
+
+def _records(seed: int, points=((16, 8, 12), (24, 12, 8))):
+    """Synthetic fully measured records with random (positive) times."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for p in points:
+        algos = GRAM_AATB.algorithms(p)
+        times = {a.name: float(t) for a, t in
+                 zip(algos, rng.uniform(1e-4, 1e-2, len(algos)))}
+        flops = {a.name: a.flops for a in algos}
+        out.append(Instance(tuple(p), times, flops,
+                            classify(times, flops, threshold=0.10)))
+    return out
+
+
+def test_evaluate_scores_every_requested_policy():
+    from repro.core.evaluate import evaluate_discriminants
+
+    records = _records(0)
+    res = evaluate_discriminants(GRAM_AATB, records,
+                                 ["flops", "perfmodel", "measured"],
+                                 threshold=0.10)
+    assert set(res.scores) == {"flops", "perfmodel", "measured"}
+    assert res.n_instances == len(records)
+    for s in res.scores.values():
+        assert 0.0 <= s.top1_accuracy <= 1.0
+        assert s.mean_regret >= 0.0 and s.p95_regret >= s.mean_regret * 0 \
+            and all(r >= 0 for r in s.regrets)
+    assert "top1=" in res.summary()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6))
+def test_measured_has_zero_regret_on_its_own_atlas(seed):
+    """Round-trip property: replaying the recorded times through the
+    `measured` policy reproduces the ground truth exactly — 100 % top-1,
+    0 regret, a diagonal confusion matrix."""
+    from repro.core.evaluate import evaluate_discriminants
+
+    res = evaluate_discriminants(GRAM_AATB, _records(seed), ["measured"],
+                                 threshold=0.10)
+    s = res.scores["measured"]
+    assert s.top1_accuracy == 1.0
+    assert s.mean_regret == 0.0 and s.p95_regret == 0.0
+    assert s.confusion.fp == 0 and s.confusion.fn == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6))
+def test_flops_never_predicts_an_anomaly(seed):
+    """FLOPs-as-time makes predicted fastest == cheapest by construction,
+    so its predicted classification can never be anomalous (recall 0
+    whenever ground truth has anomalies)."""
+    from repro.core.evaluate import evaluate_discriminants
+
+    res = evaluate_discriminants(GRAM_AATB, _records(seed), ["flops"],
+                                 threshold=0.10)
+    cm = res.scores["flops"].confusion
+    assert cm.tp == 0 and cm.fp == 0
+    if res.n_anomalies:
+        assert res.scores["flops"].recall == 0.0
+
+
+def test_evaluate_rejects_records_from_older_enumerations():
+    from repro.core.evaluate import evaluate_discriminants
+
+    rec = _records(1)[0]
+    rec.times.pop(sorted(rec.times)[0])
+    with pytest.raises(ValueError, match="lacks times"):
+        evaluate_discriminants(GRAM_AATB, [rec], ["flops"])
+
+
+def test_evaluate_rejects_records_with_unknown_algorithms():
+    """A superset record (atlas swept with a *newer* enumeration) gets the
+    curated diagnostic too, not classify's generic ValueError."""
+    from repro.core.evaluate import evaluate_discriminants
+
+    rec = _records(1)[0]
+    rec.times["alg99[future]"] = 1e-3
+    with pytest.raises(ValueError, match="unknown.*different enumeration"):
+        evaluate_discriminants(GRAM_AATB, [rec], ["flops"])
+
+
+def test_evaluate_isolates_per_policy_failures():
+    """A partial calibration KeyErrors `perfmodel`; its row carries the
+    error while the other policies still score (review fix — and the
+    scoreboard shares one enumeration pass across all policies)."""
+    from repro.core.evaluate import evaluate_discriminants
+    from repro.core.flops import gemm
+
+    prof = TableProfile(1e11)
+    prof.record(gemm(8, 8, 8), 1e-6)   # gemm-only: no syrk/symm entries
+    res = evaluate_discriminants(GRAM_AATB, _records(4),
+                                 ["perfmodel", "hybrid", "flops"],
+                                 profile=prof)
+    assert res.scores["perfmodel"].error is not None
+    assert "KeyError" in res.scores["perfmodel"].error
+    assert "failed:" in res.scores["perfmodel"].row()
+    assert res.scores["hybrid"].error is None
+    assert res.scores["flops"].error is None
+    assert 0.0 <= res.scores["hybrid"].top1_accuracy <= 1.0
+
+
+def test_evaluate_scores_the_policy_rank_not_the_argsort():
+    """Accuracy/regret must follow the policy's own rank() — the ordering
+    the planner executes — even when it also exposes predict_times."""
+    from repro.core.evaluate import evaluate_discriminants
+
+    class Contrarian(Discriminant):
+        name = "contrarian"
+
+        def predict_times(self, algos, ctx):
+            return {a.name: float(a.flops) for a in algos}
+
+        def rank(self, algos, ctx):   # NOT the argsort of predict_times
+            return sorted(algos, key=lambda a: (-a.flops, a.name))
+
+    register_discriminant(Contrarian())
+    try:
+        records = _records(5)
+        res = evaluate_discriminants(GRAM_AATB, records, ["contrarian"])
+        s = res.scores["contrarian"]
+        # regret of the max-FLOPs pick per record, not the flops-argsort's
+        expected = []
+        for inst in records:
+            algos = GRAM_AATB.algorithms(inst.point)
+            pick = sorted(algos, key=lambda a: (-a.flops, a.name))[0]
+            expected.append(pick_regret(inst.times, pick.name))
+        assert s.regrets == tuple(expected)
+    finally:
+        _REGISTRY.pop("contrarian")
+
+
+def test_star_import_does_not_warn():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        exec("from repro.core import *", {})
+
+
+def test_evaluate_dedupes_repeated_discriminant_names():
+    """Shared per-name counters must not double-count: a repeated name
+    once reported top-1 accuracy of 2.0."""
+    from repro.core.evaluate import evaluate_discriminants
+
+    res = evaluate_discriminants(GRAM_AATB, _records(3),
+                                 ["measured", "measured"])
+    assert list(res.scores) == ["measured"]
+    s = res.scores["measured"]
+    assert s.top1_accuracy == 1.0
+    assert len(s.regrets) == res.n_instances
+
+
+def test_experiment3_reproduces_through_evaluate_path():
+    """The paper harness is a thin shim over the scoreboard: its confusion
+    matrix equals evaluating `perfmodel` with the benched profile."""
+    from repro.core.evaluate import evaluate_discriminants
+    from repro.core.experiments import experiment3_predict_from_benchmarks
+    from repro.core.sweep import benchmark_unique_calls, collect_unique_calls
+
+    records = _records(2)
+    classified = {r.point: r for r in records}
+    runner = _CountingRunner()
+    res = experiment3_predict_from_benchmarks(
+        GRAM_AATB, runner, classified, threshold=0.05)
+    profile, _, _ = benchmark_unique_calls(
+        _CountingRunner(), collect_unique_calls(GRAM_AATB, classified))
+    ref = evaluate_discriminants(GRAM_AATB, records, ["perfmodel"],
+                                 profile=profile, threshold=0.05)
+    cm_ref = ref.scores["perfmodel"].confusion
+    assert (res.confusion.tp, res.confusion.fp, res.confusion.fn,
+            res.confusion.tn) == (cm_ref.tp, cm_ref.fp, cm_ref.fn,
+                                  cm_ref.tn)
+    assert res.n_calls_measured == len(runner.benched)
+
+
+# ------------------------------------------------ legacy atlas replay ------
+
+
+def test_legacy_atlas_fixture_normalizes_and_evaluates():
+    """Atlases written before the backend registry (no `backend` key in
+    the fingerprint) load for replay instead of crashing; the torn tail
+    is skipped and counted."""
+    from repro.core.evaluate import evaluate_atlas, load_atlas_records
+
+    replay = load_atlas_records(FIXTURES / "legacy_atlas_aatb.jsonl")
+    assert replay.legacy
+    assert replay.fingerprint.backend == "blas"
+    assert replay.fingerprint.dtype == "float64"
+    assert replay.spec_name == "AATB"
+    assert len(replay.records) == 4
+    assert replay.skipped_lines == 1    # the checked-in torn tail
+    assert find_spec(replay.spec_name) is GRAM_AATB
+
+    res = evaluate_atlas(replay, ["flops", "measured"])
+    assert res.n_instances == 4
+    assert res.scores["measured"].top1_accuracy == 1.0
+    assert res.scores["measured"].mean_regret == 0.0
+
+
+def test_strict_atlas_loader_still_rejects_legacy_headers(tmp_path):
+    """The resumable (append) loader stays strict — normalization is a
+    replay-only affordance; appending under a guessed fingerprint would
+    mix machines."""
+    import shutil
+
+    from repro.core.profile_store import current_fingerprint
+    from repro.core.sweep import AnomalyAtlas
+
+    p = tmp_path / "legacy.jsonl"
+    shutil.copy(FIXTURES / "legacy_atlas_aatb.jsonl", p)
+    with pytest.raises(Exception):
+        AnomalyAtlas(p, current_fingerprint(), "AATB", 0.10)
+
+
+# ------------------------------------------------------------- CLI ---------
+
+
+def _cli_measure(tmp_path, extra=()):
+    from repro.core.sweep import main as sweep_main
+
+    args = ["--expr", "aatb", "--grid", "8,16", "--backend", "numpy",
+            "--reps", "1", "--atlas-dir", str(tmp_path), "--quiet",
+            *extra]
+    return sweep_main(args)
+
+
+def test_cli_mode_evaluate_prints_scoreboard(tmp_path, capsys):
+    from repro.core.sweep import main as sweep_main
+
+    assert _cli_measure(tmp_path) == 0
+    capsys.readouterr()
+    args = ["--expr", "aatb", "--grid", "8,16", "--backend", "numpy",
+            "--mode", "evaluate", "--atlas-dir", str(tmp_path),
+            "--discriminants", "flops,perfmodel,hybrid", "--quiet"]
+    assert sweep_main(args) == 0
+    out = capsys.readouterr().out
+    assert "evaluate AATB" in out
+    for name in ("flops", "perfmodel", "hybrid"):
+        assert name in out
+    assert "top1=" in out and "mean_regret=" in out
+    assert "measured" not in out      # only the requested policies print
+
+
+def test_cli_mode_evaluate_survives_partial_calibration(tmp_path, capsys,
+                                                        monkeypatch):
+    """A gemm-only cached calibration makes `perfmodel` KeyError on AAᵀB's
+    syrk/symm calls; the CLI must report that row as failed and still
+    score the other policies (review fix)."""
+    from repro.core.flops import gemm
+    from repro.core.perfmodel import TableProfile
+    from repro.core.profile_store import current_fingerprint, save_profile
+    from repro.core.sweep import main as sweep_main
+
+    monkeypatch.setenv("REPRO_PROFILE_DIR", str(tmp_path / "profiles"))
+    assert _cli_measure(tmp_path) == 0
+    prof = TableProfile(1e11)
+    prof.record(gemm(8, 8, 8), 1e-6)
+    save_profile(prof, current_fingerprint(backend="numpy",
+                                           dtype="float64"))
+    capsys.readouterr()
+    args = ["--expr", "aatb", "--grid", "8,16", "--backend", "numpy",
+            "--mode", "evaluate", "--atlas-dir", str(tmp_path),
+            "--discriminants", "perfmodel,hybrid,flops", "--quiet"]
+    assert sweep_main(args) == 0
+    out = capsys.readouterr().out
+    assert "perfmodel  failed: KeyError" in out
+    assert "hybrid" in out and "flops" in out and "top1=" in out
+    assert "profile=cached" in out
+
+
+def test_cli_mode_evaluate_rejects_unknown_discriminant(tmp_path, capsys):
+    from repro.core.sweep import main as sweep_main
+
+    assert _cli_measure(tmp_path) == 0
+    args = ["--expr", "aatb", "--grid", "8,16", "--backend", "numpy",
+            "--mode", "evaluate", "--atlas-dir", str(tmp_path),
+            "--discriminants", "flops,nope"]
+    assert sweep_main(args) == 2
+
+
+def test_cli_mode_evaluate_requires_ground_truth(tmp_path, capsys):
+    from repro.core.sweep import main as sweep_main
+
+    args = ["--expr", "aatb", "--grid", "8,16", "--backend", "numpy",
+            "--mode", "evaluate", "--atlas-dir", str(tmp_path)]
+    assert sweep_main(args) == 2
+    assert "sweep ground truth first" in capsys.readouterr().err
+
+
+def test_cli_discriminants_flag_requires_evaluate_mode(tmp_path):
+    from repro.core.sweep import main as sweep_main
+
+    with pytest.raises(SystemExit):
+        sweep_main(["--expr", "aatb", "--grid", "8,16",
+                    "--atlas-dir", str(tmp_path),
+                    "--discriminants", "flops"])
+
+
+def test_cli_mode_evaluate_reads_legacy_atlas(tmp_path, capsys):
+    """A legacy atlas dropped at any name in the atlas dir is picked up
+    (single spec/threshold match) and scored end to end."""
+    import shutil
+
+    from repro.core.sweep import main as sweep_main
+
+    shutil.copy(FIXTURES / "legacy_atlas_aatb.jsonl",
+                tmp_path / "atlas-aatb-t0p1-legacy.jsonl")
+    args = ["--expr", "aatb", "--grid", "8,16", "--backend", "blas",
+            "--mode", "evaluate", "--atlas-dir", str(tmp_path),
+            "--discriminants", "flops,measured", "--quiet"]
+    assert sweep_main(args) == 0
+    out = capsys.readouterr().out
+    assert "legacy-fingerprint" in out and "top1=" in out
+
+
+def test_deprecation_suppressed_in_normal_import():
+    """Importing the package must not emit the DISCRIMINANTS warning —
+    only *touching* the deprecated alias does."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        import repro.core  # noqa: F401
+        import repro.core.selector  # noqa: F401

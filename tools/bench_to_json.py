@@ -1,14 +1,22 @@
 #!/usr/bin/env python3
 """Convert the benchmark CSV contract into a perf-trajectory JSON artifact.
 
-``python -m benchmarks.run`` prints ``name,us_per_call,derived`` rows to
+``python -m benchmarks.run`` prints ``name,value,derived`` rows to
 stdout; CI pipes them here to produce the ``BENCH_<n>.json`` artifact that
 seeds the repo's perf trajectory — one self-describing document per run,
 so regressions can be plotted across PRs without re-running anything.
 
 Usage::
 
-    python tools/bench_to_json.py bench.csv BENCH_4.json
+    python tools/bench_to_json.py bench.csv BENCH_5.json
+
+``value`` is microseconds-per-call by default; rows whose derived field
+carries a ``unit=<u>`` token (the discriminant scoreboard emits
+``unit=percent`` accuracy/regret rows) are tagged with that unit instead,
+so quality metrics ride the same trajectory as latency metrics without
+being misread as times. Each row lands as ``{"name", "value", "unit",
+"us_per_call", "derived"}`` (``us_per_call`` mirrors ``value`` for
+consumers of the original schema).
 
 The converter is strict about the row shape (a malformed emit() should
 fail CI, not silently drop a metric) but tolerant of comment lines
@@ -40,11 +48,18 @@ def parse_rows(text: str) -> list:
             us_val = float(us)
         except ValueError:
             raise SystemExit(
-                f"line {lineno}: us_per_call is not a number: {us!r}")
+                f"line {lineno}: value is not a number: {us!r}")
+        derived = parts[2].strip() if len(parts) > 2 else ""
+        unit = "us"
+        for token in derived.split(";"):
+            if token.startswith("unit="):
+                unit = token[len("unit="):].strip() or "us"
         rows.append({
             "name": name,
+            "value": us_val,
+            "unit": unit,
             "us_per_call": us_val,
-            "derived": parts[2].strip() if len(parts) > 2 else "",
+            "derived": derived,
         })
     if not rows:
         raise SystemExit("no benchmark rows found — did the run fail?")
