@@ -22,6 +22,7 @@ def main() -> None:
         muon_bench,
         planner_bench,
         roofline,
+        serve_bench,
         ssd_bench,
         sweep_bench,
         zoo_bench,
@@ -37,6 +38,7 @@ def main() -> None:
         ("experiment2 (paper §4.1.2/§4.2.2)", experiment2.main),
         ("experiment3 (paper Tables 1-2)", experiment3.main),
         ("planner discriminants (productized)", planner_bench.main),
+        ("serving plan cache (loadtest)", serve_bench.main),
         ("ssd dual-form selection", ssd_bench.main),
         ("muon NS association selection", muon_bench.main),
         ("roofline (dry-run artifacts)", roofline.main),

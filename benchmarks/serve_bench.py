@@ -1,0 +1,104 @@
+"""Serving plan-cache bench: selection latency, hit rate, coalescing.
+
+Drives the :mod:`tools.loadtest` harness through a planner-backed
+:class:`repro.serve.plan_cache.PlanService` and emits the serving rows of
+the perf trajectory (``BENCH_6.json``):
+
+    serve_select_hit_p50 / _p99   steady-state cache-hit selection (µs)
+    serve_select_miss_p50 / _p99  cold enumeration+selection (µs)
+    serve_cache_hit_rate          storm-phase hit rate (percent)
+    serve_coalesce_effectiveness  duplicate enumerations avoided (percent)
+    serve_throughput              lookups/s through the thread pool (rps)
+    serve_refine_drain            per-timing drain cost of the async
+                                  refinement worker (µs)
+
+CI scale is a few thousand requests; REPRO_BENCH_SCALE=full raises the
+storm an order of magnitude.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import pathlib
+import sys
+
+import numpy as np
+
+from .common import FULL, emit, note
+
+_TOOLS = pathlib.Path(__file__).resolve().parent.parent / "tools"
+
+
+def _load_loadtest():
+    spec = importlib.util.spec_from_file_location(
+        "loadtest", _TOOLS / "loadtest.py")
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules["loadtest"] = mod   # dataclasses resolve via sys.modules
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _refine_drain_us(service_cls) -> float:
+    """Enqueue timings against a table-backed planner, time the drain."""
+    import time
+
+    from repro.core.discriminants import as_hybrid
+    from repro.core.perfmodel import TableProfile
+    from repro.core.planner import Planner
+
+    # Empty table wrapped in the hybrid: analytical estimates rank, the
+    # table accumulates the refinements we are here to time.
+    planner = Planner(discriminant="perfmodel", backend="numpy",
+                      profile=as_hybrid(TableProfile(peak_flops=1e12)))
+    svc = service_cls(planner=planner, refine=True, queue_maxlen=4096)
+    dims = (4, 128, 512)
+    x = np.ones((4, 128), np.float32)
+    wu = np.ones((128, 512), np.float32)
+    wd = np.ones((512, 128), np.float32)
+    n = 512 if FULL else 128
+    for _ in range(n):
+        svc.execute("decmlp", dims, x, wu, wd)
+    t0 = time.perf_counter()
+    svc.shutdown(drain=True, timeout=60.0)
+    drain = time.perf_counter() - t0
+    processed = max(1, svc.worker.steps)
+    return drain / processed * 1e6
+
+
+def main() -> None:
+    lt = _load_loadtest()
+    from repro.serve.plan_cache import PlanService
+
+    requests = 20000 if FULL else 3000
+    threads = 8
+
+    def make_service() -> PlanService:
+        return PlanService(discriminant="perfmodel", backend="numpy")
+
+    rep = lt.run_loadtest(make_service(), requests=requests,
+                          threads=threads, make_service=make_service)
+    note(f"storm: {rep.requests} lookups / {threads} threads in "
+         f"{rep.wall_s:.3f}s ({rep.throughput_rps:,.0f} rps)")
+    note(f"hit p50/p99 {rep.hit_p50_us:.1f}/{rep.hit_p99_us:.1f}us, "
+         f"miss p50/p99 {rep.miss_p50_us:.1f}/{rep.miss_p99_us:.1f}us")
+
+    emit("serve_select_hit_p50", rep.hit_p50_us,
+         "steady-state cache-hit selection p50")
+    emit("serve_select_hit_p99", rep.hit_p99_us,
+         "steady-state cache-hit selection p99 (CI-gated)")
+    emit("serve_select_miss_p50", rep.miss_p50_us,
+         "cold enumeration+selection p50")
+    emit("serve_select_miss_p99", rep.miss_p99_us,
+         "cold enumeration+selection p99")
+    emit("serve_cache_hit_rate", rep.hit_rate * 100.0,
+         "unit=percent storm-phase hit rate")
+    emit("serve_coalesce_effectiveness", rep.coalesce_effectiveness * 100.0,
+         f"unit=percent burst enumerations={rep.burst_misses}")
+    emit("serve_throughput", rep.throughput_rps,
+         f"unit=rps {threads}-thread lookup storm")
+    emit("serve_refine_drain", _refine_drain_us(PlanService),
+         "async refinement drain per timing")
+
+
+if __name__ == "__main__":
+    main()

@@ -203,9 +203,12 @@ def calibrate(
 
 
 def main(argv: Optional[List[str]] = None) -> int:
+    from .cli_help import backends_epilog, discriminants_epilog
     ap = argparse.ArgumentParser(
         prog="python -m repro.core.calibrate",
-        description="Calibrate this machine's kernel performance profile.")
+        description="Calibrate this machine's kernel performance profile.",
+        epilog=backends_epilog() + "\n\n" + discriminants_epilog(),
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--backend", choices=registered_backends(),
                     default="blas",
                     help="execution backend to calibrate (the registry "

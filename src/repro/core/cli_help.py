@@ -1,0 +1,49 @@
+"""Registry-generated ``--help`` epilogs for the sweep/calibrate CLIs.
+
+The epilogs used to be prose that listed policies and backends by hand,
+so anything added to a registry after the prose was written —
+``roofline``, ``rankk``, user-registered entries — was invisible to
+``--help``. These helpers are the fix: the listings are *generated* from
+:func:`repro.core.discriminants.registered_discriminants` and
+:func:`repro.core.backends.registered_backends` at parser-build time, so
+the help text can never drift from what the registries accept
+(pinned by ``tests/test_serve.py``).
+"""
+
+from __future__ import annotations
+
+
+def _first_doc_line(obj: object) -> str:
+    doc = (getattr(obj, "__doc__", None) or "").strip()
+    return doc.splitlines()[0].rstrip(".") if doc else ""
+
+
+def discriminants_epilog() -> str:
+    """One line per registered selection policy, capability-flagged."""
+    from .discriminants import get_discriminant, registered_discriminants
+
+    lines = ["registered discriminants (repro.core.discriminants):"]
+    for name in registered_discriminants():
+        d = get_discriminant(name)
+        flags = []
+        if getattr(d, "requires_profile", False):
+            flags.append("profile")
+        if getattr(d, "requires_measurement", False):
+            flags.append("measures")
+        tag = f" [{', '.join(flags)}]" if flags else ""
+        lines.append(f"  {name:<10} {_first_doc_line(type(d))}{tag}")
+    return "\n".join(lines)
+
+
+def backends_epilog() -> str:
+    """One line per registered execution backend + its fingerprint dtype."""
+    from .backends import registered_backends
+    from .backends.base import backend_default_dtype, get_backend_class
+
+    lines = ["registered execution backends (repro.core.backends):"]
+    for name in registered_backends():
+        cls = get_backend_class(name)
+        dtype = backend_default_dtype(name)
+        lines.append(f"  {name:<8} {_first_doc_line(cls)} "
+                     f"[dtype={dtype}]")
+    return "\n".join(lines)

@@ -20,6 +20,12 @@ Registered families::
     atab   Aᵀ·A·B             tall-skinny Gram, tri-storage propagation
     abab   (AB)(AB)ᵀ          Gram of a *product* (intermediate SYRK)
 
+Serving families (the decode hot path, docs/serving.md)::
+
+    decproj  X·W               decode projection GEMM (qkv / logits)
+    decattn  P·V·Wo            attention value→output chain (2 orders)
+    decmlp   X·Wup·Wdn         MLP up→down chain (2 orders)
+
 Registering a new family (see docs/architecture.md)::
 
     def _build_myexpr(dims):          # module-level: pickles across pools
@@ -39,6 +45,7 @@ from typing import Callable, Dict, Iterable, List, Mapping, Sequence, Tuple
 from .algorithms import Algorithm, chain_leaves, enumerate_algorithms
 from .expr import (
     Chain,
+    Matrix,
     gram_left_times,
     gram_of_product,
     gram_right_times,
@@ -229,6 +236,27 @@ def _build_aatb(dims: Sequence[int]) -> Chain:
     return gram_times(*dims)
 
 
+def _build_decproj(dims: Sequence[int]) -> Chain:
+    t, d, k = dims
+    return Chain((Matrix("X", t, d), Matrix("W", d, k)))
+
+
+def _build_decattn(dims: Sequence[int]) -> Chain:
+    t, s, h, d = dims
+    P = Matrix("P", t, s)
+    V = Matrix("V", s, h)
+    Wo = Matrix("Wo", h, d)
+    return Chain((P, V, Wo))
+
+
+def _build_decmlp(dims: Sequence[int]) -> Chain:
+    t, d, f = dims
+    X = Matrix("X", t, d)
+    Wup = Matrix("Wu", d, f)
+    Wdn = Matrix("Wd", f, d)
+    return Chain((X, Wup, Wdn))
+
+
 def _build_abcde(dims: Sequence[int]) -> Chain:
     return matrix_chain(*dims)
 
@@ -292,6 +320,29 @@ GRAM_ABAB = register(ExpressionSpec(
     description="Gram of a product (AB)(AB)ᵀ (A: d0×d1, B: d1×d2); "
                 "intermediate-Gram SYRK; 13 algorithms"),
     cli="abab")
+
+SERVE_DECPROJ = register(ExpressionSpec(
+    name="DECPROJ", ndims=3, build=_build_decproj,
+    description="serving projection GEMM X·W (X: d0×d1, W: d1×d2); the "
+                "skinny decode regime where efficiency dwarfs FLOPs; "
+                "1 algorithm"),
+    cli="decproj")
+
+SERVE_DECATTN = register(ExpressionSpec(
+    name="DECATTN", ndims=4, build=_build_decattn,
+    description="decode attention value→output chain P·V·Wo (P: d0×d1, "
+                "V: d1×d2, Wo: d2×d3); 2 association orders",
+    # 4 free dims: trim named grids so len(values)**4 stays tractable.
+    grids={"small": (32, 64, 96),
+           "default": (64, 128, 256, 512),
+           "full": (128, 256, 512, 1024)}),
+    cli="decattn")
+
+SERVE_DECMLP = register(ExpressionSpec(
+    name="DECMLP", ndims=3, build=_build_decmlp,
+    description="decode MLP chain X·Wup·Wdn (X: d0×d1, Wup: d1×d2, "
+                "Wdn: d2×d1); 2 association orders"),
+    cli="decmlp")
 
 #: Back-compat alias: the pre-registry name for the CLI mapping.
 SPECS = REGISTRY

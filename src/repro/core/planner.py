@@ -24,9 +24,13 @@ keeps sharpening the model the calibration seeded. ``planner.save()``
 persists the refined table back to the cache.
 
 The planner is consumed by:
-  * ``repro.optim.muon``   — Gram-product chains (the paper's AAᵀB);
-  * ``repro.models.ssm``   — SSD quadratic-vs-chunked dual selection;
-  * ``repro.serve.decode`` — decode-step projection chains (1-token GEMMs).
+  * ``repro.serve.plan_cache`` — the serving layer's concurrent shape→plan
+    cache (lock-free hits, coalesced misses, async refinement);
+  * ``repro.models.attention`` — decode-step P·V·Wo association order is
+    chosen by the planner at trace time (the ``decattn`` zoo family);
+  * ``repro.core.sweep`` / the benchmarks — batch enumeration+selection.
+
+See docs/serving.md for the request-path view of this module.
 """
 
 from __future__ import annotations
@@ -96,6 +100,21 @@ class Planner:
     ``jax/float32`` when recording, so online JAX timings are never filed
     under the ``blas/float64`` calibration that Experiment 3 trusts as
     isolated BLAS benchmarks.
+
+    Example (pure-arithmetic policy, no profile or hardware needed)::
+
+        >>> from repro.core.expr import matrix_chain
+        >>> from repro.core.planner import Planner
+        >>> planner = Planner(discriminant="flops", backend="numpy")
+        >>> plan = planner.plan(matrix_chain(8, 512, 8, 512))
+        >>> plan.discriminant
+        'flops'
+        >>> plan.algorithm.name          # (8×512)·(512×8) first is cheapest
+        'alg1[gemm+gemm]'
+        >>> len(plan.ranked)             # 3-operand chain: 2 orders ranked
+        2
+        >>> planner.plan(matrix_chain(8, 512, 8, 512)) is plan  # memoised
+        True
     """
 
     def __init__(
@@ -188,7 +207,38 @@ class Planner:
         table = self._recording_table()
         return table.generation if table is not None else -1
 
+    def policy_fingerprint(self) -> Tuple:
+        """Stable identity of the selection policy (registry key + params).
+
+        Parametrized discriminants (``rankk``'s measurement budget) fold
+        their parameters in, so two planners configured differently can
+        never alias one cache slot. :mod:`repro.serve.plan_cache` folds
+        this into its shape→plan key.
+        """
+        return self._policy.fingerprint()
+
+    def profile_generation(self) -> int:
+        """Current profile generation this planner would rank under.
+
+        −1 when the policy never reads the profile (pure arithmetic) or
+        there is no live table; otherwise the table's mutation counter.
+        A bump means online refinement may have flipped rankings — plans
+        memoised under an older generation are stale. This is the serving
+        cache's invalidation signal (docs/serving.md).
+        """
+        return self._profile_generation()
+
     def plan(self, c: Chain, env: Optional[Dict[str, int]] = None) -> Plan:
+        """Enumerate, rank, and memoise: chain + sizes → :class:`Plan`.
+
+        Memoised per ``(structure, dims, policy fingerprint)`` and revali-
+        dated against :meth:`profile_generation`, so the enumeration and
+        ranking cost is paid once per shape until refinement moves the
+        profile. Thread-safe; concurrent misses may race to enumerate but
+        converge on one cached entry (the serving layer's
+        :class:`repro.serve.plan_cache.PlanCache` adds request coalescing
+        on top so same-shape misses do the work exactly once).
+        """
         key = self._key(c, env)
         gen = self._profile_generation()
         with self._lock:

@@ -322,10 +322,76 @@ def apply_prefill(params: Params, cfg: AttnConfig, x: jax.Array,
     return proj, new_cache
 
 
+def planned_pv_right_first(t: int, s: int, head_dim: int,
+                           d_model: int) -> bool:
+    """Trace-time planner consult: associate decode P·V·Wo right-first?
+
+    The decode value→output tail is a genuine 3-matrix chain per head —
+    P (t×s) · V (s×head_dim) · Wo (head_dim×d_model), the ``decattn`` zoo
+    family — with two association orders. This asks the serving plan
+    cache (:mod:`repro.serve.plan_cache`) which order the configured
+    discriminant ranks first. It runs at *trace* time (shapes here are
+    static Python ints), so under ``jax.jit`` the consult is amortised by
+    the XLA compile cache: zero per-token cost.
+
+    Selection must never take down the serving path: any failure (or the
+    ``REPRO_SERVE_PLANNER=0`` kill-switch) falls back to the left
+    association the pre-planner code always used. For realistic decode
+    geometries (t=1, head_dim ≤ d_model) every shipped policy picks left
+    — right costs s·head_dim·d_model multiply–adds per head vs left's
+    s·head_dim — so the consult leaves decode numerics alone there; only
+    shapes where a cost model genuinely prefers right (e.g. quantization
+    effects on degenerate head_dim > d_model layouts, or wide
+    speculative-decoding chunks) switch, and both orders are allclose up
+    to float reassociation.
+    """
+    try:
+        from repro.serve.plan_cache import (
+            default_plan_service, planner_enabled)
+        if not planner_enabled():
+            return False
+        plan = default_plan_service().lookup(
+            "decattn", (t, s, head_dim, d_model))
+        first = plan.algorithm.calls[0]
+        # Right-first iff the first GEMM is V·Wo (its rows are the s axis).
+        return s != t and first.dims[0] == s
+    except Exception:
+        return False
+
+
+def pv_wo_output(p_attn: jax.Array, vq: jax.Array, wo_params: Params,
+                 n_heads: int, head_dim: int, out_dtype) -> jax.Array:
+    """Decode value→output tail with planner-chosen association order.
+
+    ``p_attn`` (B, H, 1, K) are the softmax probabilities, ``vq``
+    (B, K, H, head_dim) the head-expanded cached values; returns the
+    projected output (B, 1, d_model). Left association is the classic
+    ``(P·V)·Wo``; right reshapes Wo to (H, head_dim, d_model) and applies
+    it per head first. Both orders contract the same operands, so the
+    result is identical up to float reassociation.
+    """
+    b = p_attn.shape[0]
+    d_model = wo_params["w"].shape[1]
+    s = vq.shape[1]
+    if planned_pv_right_first(1, s, head_dim, d_model):
+        wo3 = wo_params["w"].astype(p_attn.dtype).reshape(
+            n_heads, head_dim, d_model)
+        vwo = jnp.einsum("bkhd,hde->bkhe", vq.astype(p_attn.dtype), wo3)
+        out = jnp.einsum("bhqk,bkhe->bqe", p_attn, vwo)
+        return out.astype(out_dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p_attn, vq.astype(p_attn.dtype))
+    out = out.reshape(b, 1, n_heads * head_dim)
+    return dense(wo_params, out.astype(out_dtype))
+
+
 def apply_decode(params: Params, cfg: AttnConfig, x: jax.Array,
                  cache: KVCache, rope: Optional[Tuple] = None
                  ) -> Tuple[jax.Array, KVCache]:
-    """One-token step: x (B, 1, d). Cache updated in place at ``length``."""
+    """One-token step: x (B, 1, d). Cache updated in place at ``length``.
+
+    The value→output tail P·V·Wo routes through :func:`pv_wo_output`,
+    whose association order is chosen by the serving planner at trace
+    time (see docs/serving.md)."""
     b, s1, _ = x.shape
     assert s1 == 1
     pos = jnp.broadcast_to(cache.length, (b, 1))
@@ -354,10 +420,9 @@ def apply_decode(params: Params, cfg: AttnConfig, x: jax.Array,
         mask &= kpos[None, :] > idx - cfg.window
     logits = jnp.where(mask[None, None], logits, -1e30)
     p = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bhqk,bkhd->bqhd", p, vq.astype(p.dtype))
-    out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
-    return dense(params["wo"], out.astype(x.dtype)), KVCache(
-        new_k, new_v, idx + 1)
+    proj = pv_wo_output(p, vq, params["wo"], cfg.n_heads, cfg.head_dim,
+                        x.dtype)
+    return proj, KVCache(new_k, new_v, idx + 1)
 
 
 def apply_cross(params: Params, cfg: AttnConfig, x: jax.Array,

@@ -473,10 +473,11 @@ def _decode_attn_dynwin(p, acfg: AttnConfig, h, kv: KVCache, rope, w):
     mask &= jnp.where(w > 0, kpos[None, :] > idx - w, True)
     logits = jnp.where(mask[None, None], logits, -1e30)
     pattn = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bhqk,bkhd->bqhd", pattn, vq.astype(pattn.dtype))
-    out = out.reshape(b, 1, acfg.n_heads * acfg.head_dim)
-    return layers.dense(p["wo"], out.astype(h.dtype)), KVCache(
-        new_k, new_v, idx + 1)
+    # P·V·Wo association order comes from the serving planner (trace-time
+    # consult, amortised by the jit cache — see attention.pv_wo_output).
+    proj = attention.pv_wo_output(pattn, vq, p["wo"], acfg.n_heads,
+                                  acfg.head_dim, h.dtype)
+    return proj, KVCache(new_k, new_v, idx + 1)
 
 
 def apply_prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,

@@ -1,8 +1,14 @@
 """Runtime supervision: bounded-restart supervisor, straggler monitor,
-heartbeat failure detection."""
+drainable background workers, heartbeat failure detection."""
 
 from . import supervisor
-from .supervisor import Heartbeat, RestartPolicy, StragglerMonitor, Supervisor
+from .supervisor import (
+    BackgroundWorker,
+    Heartbeat,
+    RestartPolicy,
+    StragglerMonitor,
+    Supervisor,
+)
 
-__all__ = ["supervisor", "Heartbeat", "RestartPolicy", "StragglerMonitor",
-           "Supervisor"]
+__all__ = ["supervisor", "BackgroundWorker", "Heartbeat", "RestartPolicy",
+           "StragglerMonitor", "Supervisor"]

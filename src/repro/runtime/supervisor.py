@@ -1,13 +1,21 @@
-"""Run supervisor: bounded-restart retry loop + straggler monitor.
+"""Run supervisor: bounded restarts, stragglers, background workers.
 
-At 1000-node scale the训 loop is wrapped by a supervisor that (a) restarts
-the step loop from the latest checkpoint on worker failure, (b) watches
-step-time statistics for stragglers, and (c) coordinates elastic re-mesh
-on topology change. None of these need real TPUs to be engineered and
-unit-tested:
+At 1000-node scale the training loop is wrapped by a supervisor that (a)
+restarts the step loop from the latest checkpoint on worker failure, (b)
+watches step-time statistics for stragglers, and (c) coordinates elastic
+re-mesh on topology change. The serving stack reuses the same primitives:
+the planner's async refinement worker (:mod:`repro.serve.plan_cache`) is
+a :class:`BackgroundWorker`, and decode-step latency feeds a
+:class:`StragglerMonitor`. None of these need real TPUs to be engineered
+and unit-tested:
 
   * :class:`Supervisor` — run(fn) with bounded restarts and exponential
     backoff; failure injection in tests exercises the restart path.
+  * :class:`BackgroundWorker` — drainable daemon loop around a ``step()``
+    callable; ``stop(drain=True)`` keeps stepping until the work source
+    reports empty, then joins — the graceful-shutdown contract the
+    refinement worker relies on (production timings queued before
+    shutdown are folded into the profile, not dropped).
   * :class:`StragglerMonitor` — EMA of step wall time; flags steps slower
     than ``threshold ×`` the EMA. On a real deployment the flag feeds the
     re-mesh decision (drop the slow host, restore on the smaller mesh via
@@ -67,6 +75,94 @@ class Supervisor:
                 backoff = min(backoff * self.policy.backoff_mult,
                               self.policy.max_backoff_s)
                 attempt += 1
+
+
+class BackgroundWorker:
+    """Drainable daemon loop around a ``step()`` callable.
+
+    ``step()`` performs one unit of work and returns truthy, or returns
+    falsy when its work source is empty — the worker then parks on an
+    event until :meth:`notify` (producers call it after enqueueing) or
+    the idle poll interval elapses.
+
+    Shutdown contract (what the plan-cache refinement worker needs):
+
+    * ``stop(drain=True)`` — graceful: the loop keeps calling ``step()``
+      until it reports idle, then exits; ``stop`` joins the thread. With
+      producers quiesced first, this is a *deterministic* drain — every
+      item enqueued before the call is processed before ``stop`` returns.
+    * ``stop(drain=False)`` — prompt: the loop exits before the next
+      ``step()``; unprocessed items stay in the owner's queue.
+
+    Exceptions from ``step()`` are counted (``errors``), reported to
+    ``on_error`` and treated as one unit of work — a poisoned item must
+    not wedge the drain. The worker never re-raises into the owner.
+    """
+
+    def __init__(self, step: Callable[[], Any], name: str = "bg-worker",
+                 idle_wait_s: float = 0.05,
+                 on_error: Optional[Callable[[BaseException], Any]] = None):
+        self._step = step
+        self._name = name
+        self._idle_wait = idle_wait_s
+        self._on_error = on_error
+        self._wake = threading.Event()
+        self._stop_evt = threading.Event()
+        self._drain = True
+        self._thread: Optional[threading.Thread] = None
+        self.steps = 0
+        self.errors = 0
+
+    def start(self) -> "BackgroundWorker":
+        if self._thread is not None and self._thread.is_alive():
+            return self
+        self._stop_evt.clear()
+        self._wake.clear()
+        self._thread = threading.Thread(target=self._run, name=self._name,
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def _run(self) -> None:
+        while True:
+            if self._stop_evt.is_set() and not self._drain:
+                return
+            try:
+                did = bool(self._step())
+            except Exception as e:  # noqa: BLE001 — isolate the owner
+                self.errors += 1
+                did = True
+                if self._on_error is not None:
+                    self._on_error(e)
+            if did:
+                self.steps += 1
+                continue
+            if self._stop_evt.is_set():
+                return  # stopping + idle == drained
+            self._wake.wait(self._idle_wait)
+            self._wake.clear()
+
+    def notify(self) -> None:
+        """Wake the worker (a producer enqueued work)."""
+        self._wake.set()
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def stop(self, drain: bool = True, timeout: float = 10.0) -> bool:
+        """Stop the loop; returns True iff the thread exited in time."""
+        self._drain = bool(drain)
+        self._stop_evt.set()
+        self._wake.set()
+        t = self._thread
+        if t is None:
+            return True
+        t.join(timeout)
+        if t.is_alive():
+            return False
+        self._thread = None
+        return True
 
 
 class StragglerMonitor:

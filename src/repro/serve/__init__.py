@@ -1,5 +1,11 @@
-"""Serving substrate: KV/SSM cache decode steps + generation loop."""
+"""Serving substrate: decode steps, generation loop, and the plan cache.
 
-from . import decode
+``decode`` hosts the KV/SSM-cache serving steps; ``plan_cache`` is the
+planner-as-a-service layer (shape→plan cache with lock-free reads,
+request coalescing, async refinement — see docs/serving.md).
+"""
 
-__all__ = ["decode"]
+from . import decode, plan_cache
+from .plan_cache import PlanService, default_plan_service
+
+__all__ = ["decode", "plan_cache", "PlanService", "default_plan_service"]

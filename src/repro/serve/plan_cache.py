@@ -1,0 +1,373 @@
+"""Planner-as-a-service: the concurrent shape→plan cache for serving.
+
+The planner (:mod:`repro.core.planner`) makes algorithm selection a
+runtime feature; this module makes it a *servable* one. A live decode
+path cannot afford enumeration+ranking per request (milliseconds), nor a
+lock on the hit path (convoys under thousands of concurrent requests).
+The serving layer therefore splits the problem three ways
+(docs/serving.md is the narrative version):
+
+* :class:`PlanCache` — shape→plan map with **lock-free reads**. Hits are
+  a single ``dict.get`` on an immutable-once-published entry (safe under
+  both the GIL and free-threaded builds: entries are published fully
+  constructed, never mutated). The single lock is taken only on miss, to
+  install a :class:`_Inflight` marker — which also gives **request
+  coalescing**: N concurrent same-shape misses run ONE
+  enumeration+selection; the other N−1 park on an event and read the
+  published plan.
+* **Generation invalidation** — the cache key is ``(expr, dims, dtype,
+  backend, policy fingerprint, profile generation)``. Online refinement
+  bumps the profile's generation; the next lookup misses, re-ranks under
+  the new table, and publishing the fresh plan purges the stale
+  same-shape entry so the cache never grows per refinement.
+* :class:`RefinementQueue` + a :class:`~repro.runtime.supervisor.
+  BackgroundWorker` — production timings are folded into the profile
+  *asynchronously*. The request path only appends to a bounded deque
+  (drop-oldest on overflow, never blocks); the worker drains it through
+  :meth:`Planner.observe`, and ``shutdown(drain=True)`` processes every
+  queued timing before returning (the supervisor's drain contract).
+
+:class:`PlanService` is the facade model code talks to; the process-wide
+instance comes from :func:`default_plan_service` and honours the
+``REPRO_SERVE_PLANNER=0`` kill-switch.
+"""
+
+from __future__ import annotations
+
+import collections
+import os
+import threading
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.backends import measure_seconds
+from repro.core.expressions import get_spec
+from repro.core.planner import Plan, Planner
+from repro.runtime.supervisor import BackgroundWorker
+
+__all__ = [
+    "PlanCache", "PlanService", "RefinementQueue",
+    "default_plan_service", "planner_enabled", "reset_default_plan_service",
+]
+
+
+def planner_enabled() -> bool:
+    """Serving kill-switch: ``REPRO_SERVE_PLANNER=0`` disables the consult.
+
+    Model hot paths check this before touching the service, so a
+    mis-calibrated profile can be neutralised in production without a
+    code change (docs/serving.md §tuning).
+    """
+    return os.environ.get("REPRO_SERVE_PLANNER", "1") != "0"
+
+
+class _Inflight:
+    """Per-key miss marker: the first thread computes, the rest wait."""
+
+    __slots__ = ("event", "plan", "error")
+
+    def __init__(self):
+        self.event = threading.Event()
+        self.plan: Optional[Plan] = None
+        self.error: Optional[BaseException] = None
+
+
+class _StatSlot:
+    """One thread's counters; written without any lock (single writer)."""
+
+    __slots__ = ("hits", "misses", "coalesced", "errors")
+
+    def __init__(self):
+        self.hits = 0
+        self.misses = 0
+        self.coalesced = 0
+        self.errors = 0
+
+
+class PlanCache:
+    """Concurrent shape→plan cache: lock-free hits, coalesced misses.
+
+    Keys are opaque hashable tuples whose LAST component is the profile
+    generation; the prefix (everything else) identifies the shape. When a
+    plan for generation *g* is published, any entry for the same prefix
+    at an older generation is purged — invalidation never leaks memory.
+
+    Read path (hit): one ``dict.get``. No lock, no allocation. Entries
+    are fully-constructed :class:`Plan` objects, published exactly once.
+
+    Miss path: the lock guards only the inflight map. The first thread
+    per key installs an :class:`_Inflight` and runs ``compute()`` OUTSIDE
+    the lock; concurrent same-key callers wait on its event (coalescing:
+    exactly one enumeration per shape, a property the stress tests pin).
+    A failed compute propagates to every waiter and uninstalls the
+    marker, so the shape can be retried.
+
+    Stats are exact *and* lock-free on the hot path: each thread owns a
+    private :class:`_StatSlot` (registered once, under the lock);
+    :meth:`stats` aggregates across slots.
+    """
+
+    def __init__(self):
+        self._plans: Dict[Tuple, Plan] = {}
+        self._by_prefix: Dict[Tuple, Tuple] = {}   # prefix -> live full key
+        self._inflight: Dict[Tuple, _Inflight] = {}
+        self._lock = threading.Lock()
+        self._tls = threading.local()
+        self._slots: List[_StatSlot] = []
+
+    # -- stats ------------------------------------------------------------
+    def _slot(self) -> _StatSlot:
+        slot = getattr(self._tls, "slot", None)
+        if slot is None:
+            slot = _StatSlot()
+            self._tls.slot = slot
+            with self._lock:
+                self._slots.append(slot)
+        return slot
+
+    def stats(self) -> Dict[str, int]:
+        """Aggregate counters across threads (cold path; exact totals)."""
+        with self._lock:
+            slots = list(self._slots)
+            size = len(self._plans)
+        out = {"hits": 0, "misses": 0, "coalesced": 0, "errors": 0}
+        for s in slots:
+            out["hits"] += s.hits
+            out["misses"] += s.misses
+            out["coalesced"] += s.coalesced
+            out["errors"] += s.errors
+        out["size"] = size
+        lookups = out["hits"] + out["misses"] + out["coalesced"]
+        out["lookups"] = lookups
+        return out
+
+    # -- lookup -----------------------------------------------------------
+    def get(self, key: Tuple, compute: Callable[[], Plan]) -> Plan:
+        """Return the plan for ``key``, computing it at most once.
+
+        ``key[:-1]`` is the shape prefix, ``key[-1]`` the profile
+        generation (see class docstring). ``compute`` runs outside the
+        lock in exactly one thread per in-flight key.
+        """
+        plan = self._plans.get(key)          # lock-free hit path
+        if plan is not None:
+            self._slot().hits += 1
+            return plan
+        with self._lock:
+            plan = self._plans.get(key)      # published while we raced
+            if plan is not None:
+                self._slot().hits += 1
+                return plan
+            inflight = self._inflight.get(key)
+            if inflight is None:
+                inflight = _Inflight()
+                self._inflight[key] = inflight
+                owner = True
+            else:
+                owner = False
+        if not owner:
+            self._slot().coalesced += 1
+            inflight.event.wait()
+            if inflight.error is not None:
+                raise inflight.error
+            return inflight.plan
+        self._slot().misses += 1
+        try:
+            plan = compute()
+        except BaseException as e:
+            self._slot().errors += 1
+            with self._lock:
+                self._inflight.pop(key, None)
+            inflight.error = e
+            inflight.event.set()
+            raise
+        prefix = key[:-1]
+        with self._lock:
+            self._plans[key] = plan
+            stale = self._by_prefix.get(prefix)
+            if stale is not None and stale != key:
+                self._plans.pop(stale, None)  # generation-bump purge
+            self._by_prefix[prefix] = key
+            self._inflight.pop(key, None)
+        inflight.plan = plan
+        inflight.event.set()
+        return plan
+
+    def clear(self) -> None:
+        with self._lock:
+            self._plans.clear()
+            self._by_prefix.clear()
+
+
+class RefinementQueue:
+    """Bounded timing queue between the request path and the worker.
+
+    ``put`` NEVER blocks: at capacity the oldest pending timing is
+    dropped (``dropped`` counts them). Backpressure therefore degrades
+    refinement freshness, not request latency — the right trade for a
+    serving path where a timing is advisory but a stall is an SLO miss
+    (docs/serving.md §refinement).
+    """
+
+    def __init__(self, maxlen: int = 1024):
+        self._items: collections.deque = collections.deque(maxlen=maxlen)
+        self._lock = threading.Lock()
+        self.maxlen = maxlen
+        self.enqueued = 0
+        self.dropped = 0
+
+    def put(self, item: Any) -> bool:
+        """Append; returns False iff an older item was dropped to make room."""
+        with self._lock:
+            full = len(self._items) == self.maxlen
+            self._items.append(item)       # deque(maxlen) evicts the head
+            self.enqueued += 1
+            if full:
+                self.dropped += 1
+            return not full
+
+    def pop(self) -> Optional[Any]:
+        with self._lock:
+            return self._items.popleft() if self._items else None
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._items)
+
+
+class PlanService:
+    """Facade: zoo family + dims → plan, with async online refinement.
+
+    Owns a :class:`~repro.core.planner.Planner`, a :class:`PlanCache`,
+    a :class:`RefinementQueue` and (when ``refine=True``) a
+    :class:`~repro.runtime.supervisor.BackgroundWorker` that drains
+    timings into :meth:`Planner.observe`.
+
+    ``lookup(family, dims)`` is the hot path: build the cache key (one
+    ``profile_generation()`` read — a plain attribute load), then a
+    lock-free cache probe; a miss delegates to the planner under the
+    coalescing protocol. ``execute(...)`` additionally runs the plan,
+    times it, and enqueues the timing for asynchronous refinement —
+    request latency never includes profile maintenance.
+    """
+
+    def __init__(self, discriminant: str = "perfmodel",
+                 backend: str = "numpy", dtype: str = "float32",
+                 planner: Optional[Planner] = None, refine: bool = False,
+                 queue_maxlen: int = 1024):
+        self.planner = planner if planner is not None else Planner(
+            discriminant=discriminant, backend=backend)
+        self.dtype = dtype
+        self.cache = PlanCache()
+        self.queue = RefinementQueue(maxlen=queue_maxlen)
+        self.refine = refine
+        self._accepting = True
+        self.worker: Optional[BackgroundWorker] = None
+        if refine:
+            self.worker = BackgroundWorker(
+                self._refine_step, name="plan-refine").start()
+
+    # -- hot path ---------------------------------------------------------
+    def key(self, family: str, dims: Sequence[int]) -> Tuple:
+        """The serving cache key (docs/serving.md §cache-key):
+        ``(expr, dims, dtype, backend, policy fingerprint, generation)``.
+        """
+        return (family, tuple(int(d) for d in dims), self.dtype,
+                self.planner.backend, self.planner.policy_fingerprint(),
+                self.planner.profile_generation())
+
+    def lookup(self, family: str, dims: Sequence[int]) -> Plan:
+        """Shape → plan. Lock-free on hit; coalesced planner call on miss."""
+        key = self.key(family, dims)
+
+        def compute() -> Plan:
+            spec = get_spec(family)
+            return self.planner.plan(spec.chain(key[1]))
+
+        return self.cache.get(key, compute)
+
+    def execute(self, family: str, dims: Sequence[int], *arrays: Any) -> Any:
+        """Plan, run, and (async) refine: the full serving request path.
+
+        The execution is wall-timed (blocking on async dispatch — see
+        :func:`repro.core.backends.measure_seconds`); the timing is
+        appended to the bounded queue and folded into the profile by the
+        background worker, never on this thread.
+        """
+        plan = self.lookup(family, dims)
+        if not self.refine:
+            return plan.fn(*arrays)
+        out, seconds = measure_seconds(plan.fn, *arrays)
+        if self._accepting:
+            self.queue.put((plan, seconds))
+            if self.worker is not None:
+                self.worker.notify()
+        return out
+
+    # -- refinement worker ------------------------------------------------
+    def _refine_step(self) -> bool:
+        item = self.queue.pop()
+        if item is None:
+            return False
+        plan, seconds = item
+        self.planner.observe(plan, seconds)
+        return True
+
+    # -- lifecycle --------------------------------------------------------
+    def warmup(self, shapes: Sequence[Tuple[str, Sequence[int]]]) -> None:
+        """Pre-plan known shapes so first requests hit the cache."""
+        for family, dims in shapes:
+            self.lookup(family, dims)
+
+    def stats(self) -> Dict[str, Any]:
+        out = dict(self.cache.stats())
+        out["refine_enqueued"] = self.queue.enqueued
+        out["refine_dropped"] = self.queue.dropped
+        out["refine_pending"] = len(self.queue)
+        if self.worker is not None:
+            out["refine_steps"] = self.worker.steps
+            out["refine_errors"] = self.worker.errors
+        return out
+
+    def shutdown(self, drain: bool = True, timeout: float = 10.0) -> bool:
+        """Quiesce producers, then stop the worker (drain by default).
+
+        With ``drain=True`` every timing enqueued before this call is
+        folded into the profile before we return — the deterministic
+        drain the supervisor module promises. Returns True iff the
+        worker exited within ``timeout``.
+        """
+        self._accepting = False
+        if self.worker is None:
+            return True
+        return self.worker.stop(drain=drain, timeout=timeout)
+
+
+_default_service: Optional[PlanService] = None
+_default_lock = threading.Lock()
+
+
+def default_plan_service() -> PlanService:
+    """Process-wide service used by the model hot paths (lazy singleton).
+
+    Discriminant and backend come from ``REPRO_SERVE_DISCRIMINANT`` /
+    ``REPRO_SERVE_BACKEND`` (defaults ``perfmodel`` / ``numpy`` — the
+    consult is trace-time only, so the execution backend of the service
+    is irrelevant to model numerics; see docs/serving.md §hot-path).
+    """
+    global _default_service
+    with _default_lock:
+        if _default_service is None:
+            _default_service = PlanService(
+                discriminant=os.environ.get(
+                    "REPRO_SERVE_DISCRIMINANT", "perfmodel"),
+                backend=os.environ.get("REPRO_SERVE_BACKEND", "numpy"))
+        return _default_service
+
+
+def reset_default_plan_service(shutdown: bool = True) -> None:
+    """Drop the process-wide service (tests; config change)."""
+    global _default_service
+    with _default_lock:
+        svc, _default_service = _default_service, None
+    if svc is not None and shutdown:
+        svc.shutdown(drain=False, timeout=2.0)

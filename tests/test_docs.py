@@ -16,7 +16,8 @@ def _load_checker():
 
 
 def test_docs_pages_exist():
-    for page in ("architecture.md", "calibration.md", "discriminants.md"):
+    for page in ("architecture.md", "calibration.md", "discriminants.md",
+                 "serving.md"):
         path = REPO / "docs" / page
         assert path.is_file(), page
         assert path.read_text().strip().startswith("#"), page
@@ -25,9 +26,34 @@ def test_docs_pages_exist():
 def test_readme_links_into_docs():
     text = (REPO / "README.md").read_text()
     for page in ("docs/architecture.md", "docs/calibration.md",
-                 "docs/discriminants.md"):
+                 "docs/discriminants.md", "docs/serving.md"):
         assert page in text, page
     assert "repro.core.sweep" in text  # quickstart runs the sweep engine
+    assert "tools/loadtest.py" in text  # serving quickstart
+
+
+def test_serving_guide_covers_the_contracts():
+    """docs/serving.md documents what the code actually enforces."""
+    text = (REPO / "docs" / "serving.md").read_text()
+    for needle in (
+        "profile generation",       # cache-key + invalidation rule
+        "coalescing",               # miss semantics
+        "drop",                     # queue backpressure: drop-oldest
+        "REPRO_SERVE_PLANNER",      # kill-switch
+        "plan_cache",               # the module the guide narrates
+        "tools/loadtest.py",        # quickstart command
+    ):
+        assert needle in text, needle
+
+
+def test_planner_doctests_execute():
+    """The Planner class example in core/planner.py runs as shown."""
+    import doctest
+
+    import repro.core.planner as planner_mod
+    results = doctest.testmod(planner_mod)
+    assert results.attempted >= 5
+    assert results.failed == 0
 
 
 def test_all_intra_repo_markdown_links_resolve(capsys):

@@ -1,0 +1,389 @@
+"""Serving plan-cache tests: concurrency, invalidation, drain, epilogs.
+
+Pins the contracts docs/serving.md documents: lock-free reads return
+consistent plans under thread-pool stress, concurrent same-shape misses
+run exactly one enumeration (coalescing), a profile generation bump
+invalidates and *flips* a stale plan, the refinement queue drops-oldest
+without blocking, and shutdown drains the worker deterministically.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import pathlib
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.discriminants import (
+    registered_discriminants,
+)
+from repro.core.backends import registered_backends
+from repro.core.expressions import get_spec, registered_names
+from repro.core.perfmodel import TableProfile
+from repro.core.planner import Planner
+from repro.runtime.supervisor import BackgroundWorker
+from repro.serve.plan_cache import (
+    PlanCache,
+    PlanService,
+    RefinementQueue,
+    planner_enabled,
+    reset_default_plan_service,
+)
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture(autouse=True)
+def _fresh_default_service():
+    reset_default_plan_service()
+    yield
+    reset_default_plan_service()
+
+
+def _table_planner(entries=None) -> Planner:
+    table = TableProfile(peak_flops=1e12)
+    for call, seconds in (entries or []):
+        table.record(call, seconds)
+    return Planner(discriminant="perfmodel", backend="numpy", profile=table)
+
+
+def _seed_decmlp(table_planner: Planner, dims, fast_idx: int):
+    """Record exact call times making algorithm ``fast_idx`` cheapest."""
+    algs = get_spec("decmlp").algorithms(dims)
+    table = table_planner.profile
+    for i, alg in enumerate(algs):
+        for call in alg.calls:
+            table.record(call, 1e-6 if i == fast_idx else 1e-3)
+    return algs
+
+
+# ------------------------------------------------------------ concurrency --
+
+
+def test_stress_no_torn_reads_and_single_enumeration():
+    svc = PlanService(discriminant="flops", backend="numpy")
+    calls = []
+    lock = threading.Lock()
+    inner = svc.planner.plan
+
+    def slow_plan(chain, env=None):
+        with lock:
+            calls.append(chain)
+        time.sleep(0.02)            # widen the race window
+        return inner(chain, env)
+
+    svc.planner.plan = slow_plan
+    threads, per_thread = 16, 20
+    shapes = [("decmlp", (1, 64, 256)), ("decproj", (1, 64, 128)),
+              ("decattn", (1, 128, 32, 64))]
+    start = threading.Barrier(threads)
+    results = [[] for _ in range(threads)]
+    errors = []
+
+    def worker(tid):
+        try:
+            start.wait()
+            for i in range(per_thread):
+                fam, dims = shapes[(tid + i) % len(shapes)]
+                results[tid].append((fam, svc.lookup(fam, dims)))
+        except BaseException as e:   # noqa: BLE001
+            errors.append(e)
+
+    ts = [threading.Thread(target=worker, args=(i,)) for i in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errors
+    # exactly one enumeration per distinct shape, however many threads
+    assert len(calls) == len(shapes)
+    # no torn reads: every thread saw the same Plan object per family
+    by_family = {}
+    for chunk in results:
+        for fam, plan in chunk:
+            assert plan is by_family.setdefault(fam, plan)
+    stats = svc.cache.stats()
+    assert stats["misses"] == len(shapes)
+    assert stats["hits"] + stats["coalesced"] == \
+        threads * per_thread - len(shapes)
+
+
+def test_coalesced_waiters_share_one_plan():
+    svc = PlanService(discriminant="flops", backend="numpy")
+    inner = svc.planner.plan
+    svc.planner.plan = lambda c, env=None: (time.sleep(0.05),
+                                            inner(c, env))[1]
+    n = 12
+    start = threading.Barrier(n)
+    seen = []
+    lock = threading.Lock()
+
+    def worker():
+        start.wait()
+        p = svc.lookup("decmlp", (2, 96, 384))
+        with lock:
+            seen.append(p)
+
+    ts = [threading.Thread(target=worker) for _ in range(n)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert len({id(p) for p in seen}) == 1
+    stats = svc.cache.stats()
+    assert stats["misses"] == 1
+    assert stats["coalesced"] == n - 1
+
+
+def test_miss_error_propagates_and_shape_retries():
+    cache = PlanCache()
+    boom = [True]
+
+    def compute():
+        if boom[0]:
+            raise RuntimeError("enumeration failed")
+        return "plan"
+
+    with pytest.raises(RuntimeError):
+        cache.get(("k", 0), compute)
+    boom[0] = False
+    assert cache.get(("k", 0), compute) == "plan"
+    assert cache.stats()["errors"] == 1
+
+
+# ------------------------------------------------------------ invalidation --
+
+
+def test_generation_bump_flips_stale_plan():
+    planner = _table_planner()
+    dims = (4, 64, 256)
+    algs = _seed_decmlp(planner, dims, fast_idx=0)
+    svc = PlanService(planner=planner)
+    first = svc.lookup("decmlp", dims)
+    assert first.algorithm.name == algs[0].name
+    gen0 = planner.profile_generation()
+
+    # refinement moves the table: the other association is now cheaper
+    _seed_decmlp(planner, dims, fast_idx=1)
+    assert planner.profile_generation() > gen0
+    second = svc.lookup("decmlp", dims)
+    assert second.algorithm.name == algs[1].name
+    # the stale same-shape entry was purged, not leaked
+    assert svc.cache.stats()["size"] == 1
+
+
+def test_cache_key_components():
+    svc = PlanService(discriminant="flops", backend="numpy", dtype="bf16")
+    key = svc.key("decproj", (1, 8, 8))
+    assert key[0] == "decproj" and key[1] == (1, 8, 8)
+    assert key[2] == "bf16" and key[3] == "numpy"
+    assert key[4] == svc.planner.policy_fingerprint()
+    assert key[5] == svc.planner.profile_generation()
+
+
+# ------------------------------------------------------- refinement queue --
+
+
+def test_refinement_queue_drops_oldest_without_blocking():
+    q = RefinementQueue(maxlen=4)
+    for i in range(10):
+        q.put(i)
+    assert q.enqueued == 10
+    assert q.dropped == 6
+    assert len(q) == 4
+    assert [q.pop() for _ in range(4)] == [6, 7, 8, 9]  # oldest went first
+    assert q.pop() is None
+
+
+def test_execute_refines_asynchronously_and_shutdown_drains():
+    planner = _table_planner()
+    dims = (4, 64, 256)
+    _seed_decmlp(planner, dims, fast_idx=0)
+    svc = PlanService(planner=planner, refine=True, queue_maxlen=256)
+    table = planner.profile
+    gen0 = table.generation
+    x = np.ones((4, 64), np.float32)
+    wu = np.ones((64, 256), np.float32)
+    wd = np.ones((256, 64), np.float32)
+    n = 32
+    for _ in range(n):
+        svc.execute("decmlp", dims, x, wu, wd)
+    assert svc.queue.enqueued == n
+    assert svc.shutdown(drain=True)            # deterministic drain
+    assert len(svc.queue) == 0
+    assert svc.worker.steps >= n               # every timing processed
+    assert table.generation > gen0             # observations landed
+    # post-shutdown executions still run, but no longer enqueue
+    svc.execute("decmlp", dims, x, wu, wd)
+    assert svc.queue.enqueued == n
+
+
+def test_background_worker_drain_is_deterministic():
+    import collections
+    items = collections.deque(range(100))
+    done = []
+
+    def step():
+        if not items:
+            return False
+        done.append(items.popleft())
+        return True
+
+    w = BackgroundWorker(step, idle_wait_s=0.01).start()
+    assert w.stop(drain=True)
+    assert done == list(range(100))
+    assert not w.running
+
+
+def test_background_worker_poisoned_step_does_not_wedge_drain():
+    import collections
+    items = collections.deque(range(10))
+    caught = []
+
+    def step():
+        if not items:
+            return False
+        v = items.popleft()
+        if v % 3 == 0:
+            raise ValueError(v)
+        return True
+
+    w = BackgroundWorker(step, on_error=caught.append,
+                         idle_wait_s=0.01).start()
+    assert w.stop(drain=True)
+    assert not items
+    assert w.errors == len(caught) == 4        # 0, 3, 6, 9
+
+
+# ------------------------------------------------------------- model path --
+
+
+def test_pv_wo_output_orders_agree():
+    import jax.numpy as jnp
+    from repro.models import attention
+
+    rng = np.random.default_rng(0)
+    b, h, s, dh, d = 2, 4, 16, 8, 32
+    p_attn = jnp.asarray(rng.standard_normal((b, h, 1, s)), jnp.float32)
+    vq = jnp.asarray(rng.standard_normal((b, s, h, dh)), jnp.float32)
+    wo = {"w": jnp.asarray(rng.standard_normal((h * dh, d)), jnp.float32)}
+    orig = attention.planned_pv_right_first
+    try:
+        attention.planned_pv_right_first = lambda *a: False
+        left = attention.pv_wo_output(p_attn, vq, wo, h, dh, jnp.float32)
+        attention.planned_pv_right_first = lambda *a: True
+        right = attention.pv_wo_output(p_attn, vq, wo, h, dh, jnp.float32)
+    finally:
+        attention.planned_pv_right_first = orig
+    assert left.shape == right.shape == (b, 1, d)
+    np.testing.assert_allclose(np.asarray(left), np.asarray(right),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_planner_consult_picks_left_at_decode(monkeypatch):
+    from repro.models import attention
+    monkeypatch.setenv("REPRO_SERVE_DISCRIMINANT", "flops")
+    # q=1 decode: left association is strictly cheaper under any cost
+    # model, so the consult must return False (keep the classic order).
+    assert attention.planned_pv_right_first(1, 512, 64, 256) is False
+
+
+def test_planner_kill_switch(monkeypatch):
+    from repro.models import attention
+    from repro.serve import decode as sdecode
+    from repro.models.transformer import ModelConfig
+    monkeypatch.setenv("REPRO_SERVE_PLANNER", "0")
+    assert planner_enabled() is False
+    assert attention.planned_pv_right_first(1, 512, 64, 256) is False
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=64,
+                      vocab=128, n_heads=2, n_kv_heads=2, head_dim=32,
+                      d_ff=128)
+    assert sdecode.plan_warmup(cfg, 64) == []
+
+
+def test_plan_warmup_populates_default_service(monkeypatch):
+    from repro.serve import decode as sdecode
+    from repro.serve.plan_cache import default_plan_service
+    from repro.models.transformer import ModelConfig
+    monkeypatch.setenv("REPRO_SERVE_DISCRIMINANT", "flops")
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=64,
+                      vocab=128, n_heads=2, n_kv_heads=2, head_dim=32,
+                      d_ff=128)
+    shapes = sdecode.plan_warmup(cfg, max_s=64)
+    assert ("decattn", (1, 64, 32, 64)) in shapes
+    assert ("decmlp", (1, 64, 128)) in shapes
+    stats = default_plan_service().cache.stats()
+    assert stats["size"] == len(set(shapes))
+    # a decode-shape lookup is now a pure hit
+    default_plan_service().lookup("decattn", (1, 64, 32, 64))
+    assert default_plan_service().cache.stats()["hits"] >= 1
+
+
+# ---------------------------------------------------------------- loadtest --
+
+
+def _load_tool(name: str):
+    spec = importlib.util.spec_from_file_location(
+        name, REPO / "tools" / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[name] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_loadtest_harness_reports_sane_numbers():
+    lt = _load_tool("loadtest")
+
+    def make_service():
+        return PlanService(discriminant="flops", backend="numpy")
+
+    rep = lt.run_loadtest(make_service(), requests=400, threads=4,
+                          make_service=make_service)
+    assert rep.requests == 400
+    assert rep.hit_rate > 0.99          # storm runs entirely on warm shapes
+    assert rep.hit_p50_us > 0
+    assert rep.hit_p99_us >= rep.hit_p50_us
+    assert rep.miss_p50_us > 0
+    assert rep.burst_misses == 1        # coalescing: one enumeration
+    assert rep.coalesce_effectiveness == 1.0
+    assert rep.stats["errors"] == 0
+
+
+def test_loadtest_cli_gate(capsys):
+    lt = _load_tool("loadtest")
+    assert lt.main(["--requests", "100", "--threads", "2",
+                    "--discriminant", "flops",
+                    "--gate-p99-us", "1000000"]) == 0
+    assert lt.main(["--requests", "100", "--threads", "2",
+                    "--discriminant", "flops",
+                    "--gate-p99-us", "0.000001"]) == 1
+
+
+# ------------------------------------------------------------ CLI epilogs --
+
+
+def test_sweep_epilog_lists_all_registries():
+    from repro.core.sweep import _registry_epilog
+    text = _registry_epilog()
+    for name in registered_names():
+        assert name in text
+    for name in registered_discriminants():
+        assert name in text
+    for name in registered_backends():
+        assert name in text
+
+
+def test_calibrate_help_lists_registries(capsys):
+    from repro.core import calibrate
+    with pytest.raises(SystemExit) as exc:
+        calibrate.main(["--help"])
+    assert exc.value.code == 0
+    out = capsys.readouterr().out
+    for name in registered_discriminants():
+        assert name in out
+    for name in registered_backends():
+        assert name in out
