@@ -24,8 +24,9 @@ The serving layer therefore splits the problem three ways
   BackgroundWorker` — production timings are folded into the profile
   *asynchronously*. The request path only appends to a bounded deque
   (drop-oldest on overflow, never blocks); the worker drains it through
-  :meth:`Planner.observe`, and ``shutdown(drain=True)`` processes every
-  queued timing before returning (the supervisor's drain contract).
+  :meth:`Planner.observe`, and ``shutdown(drain=True)`` quiesces
+  producers, drains the worker, then re-drains inline so timings from
+  racing producers are folded too (the supervisor's drain contract).
 
 :class:`PlanService` is the facade model code talks to; the process-wide
 instance comes from :func:`default_plan_service` and honours the
@@ -148,14 +149,20 @@ class PlanCache:
         generation (see class docstring). ``compute`` runs outside the
         lock in exactly one thread per in-flight key.
         """
+        # Acquire the stat slot BEFORE any critical section: a thread's
+        # first _slot() call registers itself under self._lock, which is
+        # non-reentrant — calling it while holding the lock would
+        # self-deadlock (exactly the thundering-herd cold start where a
+        # fresh thread races a just-published plan).
+        slot = self._slot()
         plan = self._plans.get(key)          # lock-free hit path
         if plan is not None:
-            self._slot().hits += 1
+            slot.hits += 1
             return plan
         with self._lock:
             plan = self._plans.get(key)      # published while we raced
             if plan is not None:
-                self._slot().hits += 1
+                slot.hits += 1
                 return plan
             inflight = self._inflight.get(key)
             if inflight is None:
@@ -165,16 +172,16 @@ class PlanCache:
             else:
                 owner = False
         if not owner:
-            self._slot().coalesced += 1
+            slot.coalesced += 1
             inflight.event.wait()
             if inflight.error is not None:
                 raise inflight.error
             return inflight.plan
-        self._slot().misses += 1
+        slot.misses += 1
         try:
             plan = compute()
         except BaseException as e:
-            self._slot().errors += 1
+            slot.errors += 1
             with self._lock:
                 self._inflight.pop(key, None)
             inflight.error = e
@@ -331,15 +338,24 @@ class PlanService:
     def shutdown(self, drain: bool = True, timeout: float = 10.0) -> bool:
         """Quiesce producers, then stop the worker (drain by default).
 
-        With ``drain=True`` every timing enqueued before this call is
-        folded into the profile before we return — the deterministic
-        drain the supervisor module promises. Returns True iff the
-        worker exited within ``timeout``.
+        With ``drain=True`` every timing enqueued by quiesced producers
+        is folded into the profile before we return. A producer racing
+        this call (already past the ``_accepting`` check in
+        :meth:`execute`) may enqueue after the worker observes an empty
+        queue and exits; once the worker has exited we re-drain the
+        queue inline, so such stragglers are folded too rather than
+        silently dropped. Returns True iff the worker exited within
+        ``timeout``.
         """
         self._accepting = False
         if self.worker is None:
             return True
-        return self.worker.stop(drain=drain, timeout=timeout)
+        ok = self.worker.stop(drain=drain, timeout=timeout)
+        if drain and ok:
+            # Worker is gone, so stepping inline cannot race it.
+            while self._refine_step():
+                pass
+        return ok
 
 
 _default_service: Optional[PlanService] = None

@@ -139,6 +139,41 @@ def test_coalesced_waiters_share_one_plan():
     assert stats["coalesced"] == n - 1
 
 
+def test_first_lookup_double_check_hit_does_not_deadlock():
+    # Regression: a thread's FIRST lookup whose lock-free probe misses
+    # but whose double-check under the lock hits (another thread
+    # published in between) used to call _slot() while holding the
+    # non-reentrant lock — self-deadlock. Simulate that interleaving
+    # deterministically with a dict whose first probe misses.
+    cache = PlanCache()
+    plan = object()
+    key = ("k", 0)
+
+    class RacingDict(dict):
+        def __init__(self):
+            super().__init__()
+            self.probes = 0
+
+        def get(self, k, default=None):
+            self.probes += 1
+            if self.probes == 1:
+                return None          # lock-free probe: miss
+            return super().get(k, default)
+
+    racing = RacingDict()
+    racing[key] = plan
+    cache._plans = racing
+    result = []
+    t = threading.Thread(target=lambda: result.append(
+        cache.get(key, lambda: pytest.fail("must not compute"))),
+        daemon=True)                 # a regression must not wedge pytest
+    t.start()
+    t.join(timeout=5.0)
+    assert not t.is_alive(), "first-lookup double-check hit deadlocked"
+    assert result == [plan]
+    assert cache.stats()["hits"] == 1
+
+
 def test_miss_error_propagates_and_shape_retries():
     cache = PlanCache()
     boom = [True]
@@ -220,6 +255,23 @@ def test_execute_refines_asynchronously_and_shutdown_drains():
     # post-shutdown executions still run, but no longer enqueue
     svc.execute("decmlp", dims, x, wu, wd)
     assert svc.queue.enqueued == n
+
+
+def test_shutdown_folds_straggler_timing_enqueued_during_race():
+    # A producer already past the _accepting check can enqueue after the
+    # worker observes an empty queue and exits; shutdown re-drains
+    # inline so that timing is folded, not silently lost.
+    planner = _table_planner()
+    dims = (4, 64, 256)
+    _seed_decmlp(planner, dims, fast_idx=0)
+    svc = PlanService(planner=planner, refine=True)
+    plan = svc.lookup("decmlp", dims)
+    assert svc.worker.stop(drain=True)          # worker exits, queue empty
+    gen0 = planner.profile.generation
+    svc.queue.put((plan, 1e-4))                 # the racing straggler
+    assert svc.shutdown(drain=True)
+    assert len(svc.queue) == 0
+    assert planner.profile.generation > gen0    # straggler was folded
 
 
 def test_background_worker_drain_is_deterministic():
