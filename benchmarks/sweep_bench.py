@@ -1,4 +1,5 @@
-"""Sweep-engine throughput: serial vs sharded grid sweeps (instances/sec).
+"""Sweep-engine throughput: serial vs sharded grid sweeps (instances/sec),
+plus adaptive-vs-dense budget efficiency on planted ground truth.
 
 Measures the engine itself, not the kernels: a fixed AAᵀB grid is swept
 once serially and once over a process pool, with cache flushing off and
@@ -6,6 +7,11 @@ reps=1 so the denominator is engine + dispatch overhead rather than BLAS
 time. Derived fields report instances/sec and the sharded speedup; the
 atlas write path is exercised in a throwaway directory so persistence cost
 is included.
+
+The adaptive rows sweep the planted masks of :mod:`repro.core.synthetic`
+(ground truth known by construction) and report frontier recall and
+measurement savings against the dense grid — the quantities the
+``adaptive-smoke`` CI job gates on (recall ≥ 90 %, savings > 0).
 
 REPRO_BENCH_SCALE=full uses a denser grid and more shards.
 """
@@ -18,8 +24,16 @@ import tempfile
 from pathlib import Path
 
 from repro.core import BlasRunner
+from repro.core.adaptive import adaptive_sweep
 from repro.core.profile_store import current_fingerprint
 from repro.core.sweep import GRAM_AATB, AnomalyAtlas, GridSpec, sweep
+from repro.core.synthetic import (
+    MaskRunner,
+    PlantedSpec,
+    frontier_recall,
+    planted_masks,
+    true_frontier,
+)
 
 from .common import FULL, emit, note
 
@@ -63,6 +77,35 @@ def main():
     emit("sweep_sharded", sharded.wall_s * 1e6 / max(1, sharded.n_measured),
          f"inst_per_s={sharded.instances_per_s:.2f};"
          f"shards={shards};speedup={speedup:.2f}")
+
+    adaptive_vs_dense()
+
+
+def adaptive_vs_dense():
+    """Adaptive boundary refinement vs the dense grid, per planted mask."""
+    n = 30 if FULL else 20
+    spec = PlantedSpec()
+    grid = GridSpec.uniform(tuple(range(10, 10 * n + 10, 10)), spec.ndims,
+                            name=f"planted{n}")
+    budget = int(0.40 * grid.n_points)
+    note(f"\n== adaptive vs dense: {grid.n_points}-point planted grid, "
+         f"budget {budget} (40%) ==")
+    recalls = []
+    for name, mask in sorted(planted_masks(grid).items()):
+        res = adaptive_sweep(spec, grid, budget, runner=MaskRunner(mask))
+        recall = frontier_recall(res.known, true_frontier(mask, grid))
+        savings = 1.0 - res.n_measured / grid.n_points
+        recalls.append(recall)
+        note(f"{name:8s}: recall={recall:6.1%} "
+             f"measured={res.n_measured}/{grid.n_points} "
+             f"(savings {savings:.1%}) rounds={res.n_refine_rounds} "
+             f"stopped={res.stopped}")
+        emit(f"adaptive_recall_{name}", 100.0 * recall,
+             f"unit=percent;measured={res.n_measured};"
+             f"dense={grid.n_points};savings_pct={100 * savings:.1f};"
+             f"rounds={res.n_refine_rounds};stopped={res.stopped}")
+    emit("adaptive_frontier_recall", 100.0 * min(recalls),
+         f"unit=percent;masks={len(recalls)};budget_pct=40.0")
 
 
 if __name__ == "__main__":

@@ -113,10 +113,19 @@ _LAZY_EXPORTS = {
     "Instance": ".sweep",
     "SweepResult": ".sweep",
     "atlas_path": ".sweep",
+    "atlas_shard_path": ".sweep",
     "benchmark_unique_calls": ".sweep",
     "cluster_sweep": ".sweep",
     "collect_unique_calls": ".sweep",
     "predict_classifications": ".sweep",
+    # adaptive boundary-refinement engine (imports sweep; lazy likewise —
+    # the `adaptive_sweep` *function* mirrors `sweep`/`calibrate` naming)
+    "AdaptiveResult": ".adaptive",
+    "RoundStats": ".adaptive",
+    "adaptive_sweep": ".adaptive",
+    "boundary_cells": ".adaptive",
+    "refinement_candidates": ".adaptive",
+    "seed_points": ".adaptive",
     # paper harnesses (import scipy-backed runners; lazy keeps base import
     # light and keeps `sweep` out of sys.modules at package import)
     "GRAM_AATB": ".expressions",
@@ -157,8 +166,11 @@ __all__ = [
     "Classification", "ConfusionMatrix", "Region", "classify",
     "cluster_regions", "scan_line",
     "SWEEP_GRIDS", "AnomalyAtlas", "AtlasError", "GridSpec", "Instance",
-    "SweepResult", "atlas_path", "benchmark_unique_calls", "cluster_sweep",
+    "SweepResult", "atlas_path", "atlas_shard_path",
+    "benchmark_unique_calls", "cluster_sweep",
     "collect_unique_calls", "predict_classifications",
+    "AdaptiveResult", "RoundStats", "adaptive_sweep", "boundary_cells",
+    "refinement_candidates", "seed_points",
     "Chain", "Matrix", "Transpose", "chain", "gram_times", "matrix_chain",
     "gram_left_times", "gram_of_product", "gram_right_times",
     "symmetric_sandwich",

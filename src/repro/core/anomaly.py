@@ -200,7 +200,12 @@ def cluster_regions(
     per dimension), which defines adjacency: two points are neighbours when
     they agree on all axes but one, and differ by exactly one grid position
     on that axis (so irregular spacings still cluster correctly — adjacency
-    is positional, not metric). Points outside the grid raise ``KeyError``.
+    is positional, not metric). A point off the grid (wrong dimensionality,
+    or a coordinate value not on its axis) raises ``ValueError`` naming the
+    point and the offending axis — adaptive refinement and atlas replay make
+    this user-reachable, so the error must say which input is bad. Callers
+    that legitimately mix off-grid records (e.g. random-search points
+    sharing an atlas) filter first, like :func:`repro.core.sweep.cluster_sweep`.
 
     Returns regions sorted by size (largest first), ties broken by the
     smallest member point, so output is deterministic.
@@ -210,7 +215,19 @@ def cluster_regions(
     ]
     coords = {}
     for p in scores:
-        coords[p] = tuple(index[d][int(v)] for d, v in enumerate(p))
+        if len(p) != len(index):
+            raise ValueError(
+                f"point {p} has {len(p)} dims but the grid has "
+                f"{len(index)} axes")
+        c = []
+        for d, v in enumerate(p):
+            pos = index[d].get(int(v))
+            if pos is None:
+                raise ValueError(
+                    f"point {p} is off-grid: value {v} is not on axis {d} "
+                    f"(axis values: {tuple(axes[d])})")
+            c.append(pos)
+        coords[p] = tuple(c)
     by_coord = {c: p for p, c in coords.items()}
 
     seen = set()

@@ -172,6 +172,19 @@ def atlas_path(spec_name: str, fingerprint: HardwareFingerprint,
     return d / f"atlas-{_slug(spec_name)}-t{t}-{fingerprint.slug()}.jsonl"
 
 
+def atlas_shard_path(spec_name: str, fingerprint: HardwareFingerprint,
+                     threshold: float, shard_index: int,
+                     directory: Optional[Path] = None) -> Path:
+    """Per-host shard file of a fanned-out sweep: ``…-shardK.jsonl``.
+
+    Same directory, naming scheme and header format as the canonical
+    atlas, so every shard carries the full configuration and
+    ``tools/atlas_merge.py`` can refuse to mix incompatible ones.
+    """
+    base = atlas_path(spec_name, fingerprint, threshold, directory)
+    return base.with_name(f"{base.stem}-shard{int(shard_index)}{base.suffix}")
+
+
 def _instance_to_json(inst: Instance) -> dict:
     return {
         "point": list(inst.point),
@@ -213,21 +226,37 @@ class AnomalyAtlas:
 
     A torn final line (the kill landed mid-write) is tolerated on load;
     any undecodable line is skipped and counted in ``skipped_lines``.
+
+    ``shard=(k, n)`` marks this file as host ``k``'s shard of an
+    ``n``-way fanned-out sweep (see :mod:`repro.core.adaptive`): the
+    header records it, and opening a shard file without the matching
+    shard identity (or vice versa) is an :class:`AtlasError` — a shard
+    must never silently resume as the canonical atlas before
+    ``tools/atlas_merge.py`` has reconciled it.
     """
 
     def __init__(self, path: Path, fingerprint: HardwareFingerprint,
-                 spec_name: str, threshold: float, chunk_size: int = 32):
+                 spec_name: str, threshold: float, chunk_size: int = 32,
+                 shard: Optional[Tuple[int, int]] = None):
         if chunk_size < 1:
             raise ValueError("chunk_size must be >= 1")
+        if shard is not None:
+            k, n = int(shard[0]), int(shard[1])
+            if not 0 <= k < n:
+                raise ValueError(f"shard must be (k, n) with 0 <= k < n; "
+                                 f"got {shard}")
+            shard = (k, n)
         self.path = Path(path)
         self.fingerprint = fingerprint
         self.spec_name = spec_name
         self.threshold = float(threshold)
+        self.shard = shard
         self.chunk_size = chunk_size
         self.skipped_lines = 0
         self._records: Dict[Tuple[int, ...], Instance] = {}
         self._buffer: List[str] = []
         self._header_on_disk = False
+        self._needs_newline = False
         self.recovered_from: Optional[Path] = None
         if self.path.is_file():
             self._load()
@@ -243,13 +272,16 @@ class AnomalyAtlas:
 
     # -- persistence ------------------------------------------------------
     def _header(self) -> dict:
-        return {
+        head = {
             "kind": "header",
             "version": ATLAS_SCHEMA_VERSION,
             "spec": self.spec_name,
             "threshold": self.threshold,
             "fingerprint": self.fingerprint.to_dict(),
         }
+        if self.shard is not None:
+            head["shard"] = list(self.shard)
+        return head
 
     def _load(self) -> None:
         with self.path.open() as f:
@@ -284,9 +316,17 @@ class AnomalyAtlas:
                     f"{head.get('spec')!r}/threshold="
                     f"{head.get('threshold')!r}, not "
                     f"{self.spec_name!r}/{self.threshold}")
+            head_shard = head.get("shard")
+            want_shard = list(self.shard) if self.shard is not None else None
+            if head_shard != want_shard:
+                raise AtlasError(
+                    f"atlas {self.path} records shard={head_shard}, but "
+                    f"this process opened it as shard={want_shard} — merge "
+                    f"shards with tools/atlas_merge.py instead of mixing")
             self._header_on_disk = True
-            for line in f:
-                line = line.strip()
+            raw = first
+            for raw in f:
+                line = raw.strip()
                 if not line:
                     continue
                 try:
@@ -297,6 +337,11 @@ class AnomalyAtlas:
                     self.skipped_lines += 1
                     continue
                 self._records[inst.point] = inst
+            # A torn tail has no trailing newline; appending straight after
+            # it would merge the next record into the garbage line and
+            # silently lose it on the following load. Flush starts with a
+            # newline instead (the blank line is skipped on load).
+            self._needs_newline = not raw.endswith("\n")
 
     def append(self, inst: Instance) -> bool:
         """Add one instance; returns False (no write) for known points."""
@@ -315,6 +360,9 @@ class AnomalyAtlas:
             return
         self.path.parent.mkdir(parents=True, exist_ok=True)
         with self.path.open("a") as f:
+            if self._needs_newline:
+                f.write("\n")
+                self._needs_newline = False
             if not self._header_on_disk:
                 f.write(json.dumps(self._header(), sort_keys=True) + "\n")
                 self._header_on_disk = True
@@ -874,7 +922,8 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help=f"named grid {sorted(SWEEP_GRIDS)} (per-family "
                          "axis overrides apply) or comma-separated axis "
                          "values, e.g. 64,128,256")
-    ap.add_argument("--mode", choices=("measure", "predict", "evaluate"),
+    ap.add_argument("--mode",
+                    choices=("measure", "predict", "evaluate", "adaptive"),
                     default="measure",
                     help="measure: time every algorithm per instance; "
                          "predict: classify from batched per-kernel "
@@ -882,7 +931,30 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "calibration cache); evaluate: replay the "
                          "persisted atlas and score discriminants "
                          "(top-1 accuracy, time regret, anomaly "
-                         "recall/precision) without re-measuring")
+                         "recall/precision) without re-measuring; "
+                         "adaptive: coarse seed + boundary-refinement "
+                         "rounds under --budget (resumable; shardable "
+                         "across hosts with --shard)")
+    ap.add_argument("--budget", type=int, default=None,
+                    help="adaptive mode: total trajectory budget in grid "
+                         "points (seed + refinement, global across "
+                         "--shard hosts); resumed runs honor what "
+                         "remains of it")
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="adaptive mode: max refinement rounds (default: "
+                         "until the budget runs out or a round finds no "
+                         "new frontier)")
+    ap.add_argument("--seed-stride", type=int, default=4,
+                    help="adaptive mode: seed lattice stride in grid "
+                         "indices (endpoints always included); regions "
+                         "narrower than this can be missed")
+    ap.add_argument("--shard", default=None, metavar="K/N",
+                    help="adaptive mode: run host K of an N-way fan-out "
+                         "— measures every N-th refinement candidate "
+                         "into its own atlas-…-shardK.jsonl, reading "
+                         "sibling shards back each round; merge with "
+                         "tools/atlas_merge.py (exit 3 = waiting on "
+                         "siblings, rerun after they advance)")
     ap.add_argument("--discriminants", default=None, metavar="A,B,C",
                     help="comma-separated repro.core.discriminants "
                          "registry keys to score in --mode evaluate "
@@ -938,6 +1010,24 @@ def main(argv: Optional[List[str]] = None) -> int:
         # on a measured sweep would imply the sweep was somehow filtered.
         ap.error("--discriminants only applies to --mode evaluate")
 
+    if args.mode == "adaptive":
+        if args.budget is None:
+            ap.error("--mode adaptive requires --budget (the point of "
+                     "the mode is a bounded measurement budget)")
+        if args.limit is not None:
+            ap.error("--limit is the dense-sweep budget knob; adaptive "
+                     "mode budgets via --budget")
+        if args.compare_backends:
+            ap.error("--compare-backends diffs dense atlases; run "
+                     "adaptive sweeps per backend and merge/compare "
+                     "their atlases instead")
+    else:
+        for flag, val in (("--budget", args.budget),
+                          ("--rounds", args.rounds),
+                          ("--shard", args.shard)):
+            if val is not None:
+                ap.error(f"{flag} only applies to --mode adaptive")
+
     if args.compare_backends:
         if args.mode != "measure":
             # Comparison diffs *measured* atlases; silently degrading an
@@ -951,6 +1041,9 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     if args.mode == "evaluate":
         return _main_evaluate(args, spec, grid, points)
+
+    if args.mode == "adaptive":
+        return _main_adaptive(args, spec, grid, name)
 
     atlas = _open_backend_atlas(spec, name, args)
 
@@ -977,46 +1070,112 @@ def main(argv: Optional[List[str]] = None) -> int:
     return 0
 
 
-def _open_backend_atlas(spec, name, args) -> AnomalyAtlas:
-    """The per-backend atlas: fingerprinted by the registry key + dtype."""
+def _open_backend_atlas(spec, name, args,
+                        shard: Optional[Tuple[int, int]] = None
+                        ) -> AnomalyAtlas:
+    """The per-backend atlas: fingerprinted by the registry key + dtype.
+
+    ``shard=(k, n)`` opens host k's shard file of an n-way adaptive
+    fan-out instead of the canonical atlas.
+    """
     fp = current_fingerprint(backend=name,
                              dtype=backend_default_dtype(name))
-    path = atlas_path(spec.name, fp, args.threshold, args.atlas_dir)
+    if shard is not None:
+        path = atlas_shard_path(spec.name, fp, args.threshold, shard[0],
+                                args.atlas_dir)
+    else:
+        path = atlas_path(spec.name, fp, args.threshold, args.atlas_dir)
     if args.fresh and path.is_file():
         path.unlink()
-    return AnomalyAtlas(path, fp, spec.name, args.threshold)
+    return AnomalyAtlas(path, fp, spec.name, args.threshold, shard=shard)
+
+
+def _engine_config(name, args) -> dict:
+    """Fan-out + runner kwargs for one registry backend, CLI-configured.
+
+    Follows the backend's declared ``shard_mode``: device-sharded
+    backends (jax/pallas) spread over JAX devices, process-sharded ones
+    (blas/numpy — GIL- and cache-bound) over a worker pool when
+    ``--shards`` asks for it. Shared verbatim by the dense sweep and the
+    adaptive engine so both modes measure identically.
+    """
+    if backend_shard_mode(name) == "device":
+        return dict(backend="jax", exec_backend=name, reps=args.reps,
+                    shards=args.shards or None)  # 0 = every device
+    if args.shards > 1:
+        factory = functools.partial(make_backend, name, reps=args.reps,
+                                    flush_cache=not args.no_flush)
+        return dict(backend="process", shards=args.shards,
+                    runner_factory=factory, reps=args.reps)
+    return dict(runner=make_backend(name, reps=args.reps,
+                                    flush_cache=not args.no_flush),
+                reps=args.reps)
 
 
 def _backend_sweep(spec, points, name, args, atlas) -> SweepResult:
-    """One measured sweep on one registry backend, CLI-configured.
-
-    Fan-out follows the backend's declared ``shard_mode``: device-sharded
-    backends (jax/pallas) spread over JAX devices, process-sharded ones
-    (blas/numpy — GIL- and cache-bound) over a worker pool when
-    ``--shards`` asks for it.
-    """
+    """One measured dense sweep on one registry backend, CLI-configured."""
     def progress(i, n, inst):
         if not args.quiet and (i % 25 == 0 or i == n):
             _note(f"  [{name} {i}/{n}] {inst.point} "
                   f"{'ANOMALY' if inst.cls.is_anomaly else 'ok'} "
                   f"ts={inst.cls.time_score:.1%}", args.quiet)
 
-    kwargs = dict(threshold=args.threshold, atlas=atlas,
-                  max_instances=args.limit, reps=args.reps,
-                  progress=progress)
-    if backend_shard_mode(name) == "device":
-        return sweep(spec, points, backend="jax", exec_backend=name,
-                     shards=args.shards or None,  # 0 = every device
-                     **kwargs)
-    if args.shards > 1:
-        factory = functools.partial(make_backend, name, reps=args.reps,
-                                    flush_cache=not args.no_flush)
-        return sweep(spec, points, backend="process", shards=args.shards,
-                     runner_factory=factory, **kwargs)
-    return sweep(spec, points,
-                 runner=make_backend(name, reps=args.reps,
-                                     flush_cache=not args.no_flush),
-                 **kwargs)
+    return sweep(spec, points, threshold=args.threshold, atlas=atlas,
+                 max_instances=args.limit, progress=progress,
+                 **_engine_config(name, args))
+
+
+def _parse_shard(text: str) -> Tuple[int, int]:
+    try:
+        k, n = (int(x) for x in text.split("/", 1))
+    except ValueError:
+        raise ValueError(f"--shard takes K/N (e.g. 0/4), got {text!r}")
+    if not 0 <= k < n:
+        raise ValueError(f"--shard needs 0 <= K < N, got {text!r}")
+    return k, n
+
+
+def _main_adaptive(args, spec, grid, name) -> int:
+    """--mode adaptive: budgeted boundary refinement, optionally sharded.
+
+    Exit 3 means a sharded host is waiting on sibling shard files —
+    re-invoke once the other hosts advance; the trajectory replays from
+    the shard atlas, so the retry costs no re-measurement.
+    """
+    from .adaptive import adaptive_sweep, boundary_cells
+
+    try:
+        shard = _parse_shard(args.shard) if args.shard else None
+    except ValueError as e:
+        print(str(e), file=sys.stderr)
+        return 2
+    atlas = _open_backend_atlas(spec, name, args, shard=shard)
+    _note(f"adaptive sweep {spec.name} grid={grid.name} "
+          f"({grid.n_points} grid points, budget={args.budget}, "
+          f"seed stride={args.seed_stride}), backend={name}"
+          + (f", shard {shard[0]}/{shard[1]}" if shard else ""),
+          args.quiet)
+    _note(f"atlas: {atlas.path} ({len(atlas)} instances already recorded)",
+          args.quiet)
+    res = adaptive_sweep(
+        spec, grid, args.budget, args.rounds, threshold=args.threshold,
+        atlas=atlas, shard=shard, seed_stride=args.seed_stride,
+        **_engine_config(name, args))
+    frontier = boundary_cells(res.verdicts(), grid)
+    print(f"adaptive {spec.name}/{grid.name} [{name}]: "
+          f"budget={res.budget} spent={res.spent} "
+          f"measured={res.n_measured} rounds={res.n_refine_rounds} "
+          f"stopped={res.stopped} "
+          f"({res.spent / grid.n_points:.1%} of dense, "
+          f"{len(frontier)} frontier cells) in {res.wall_s:.1f}s")
+    print(region_summary(res.regions(), len(res.known)))
+    print(f"atlas written to {res.atlas_path}")
+    if res.stopped == "awaiting-siblings":
+        _note("waiting on sibling shards — rerun this command after the "
+              "other hosts advance, then merge with tools/atlas_merge.py",
+              args.quiet)
+        return 3
+    return 0
 
 
 def _main_compare(args, spec, grid, points) -> int:
@@ -1122,8 +1281,13 @@ def _main_evaluate(args, spec, grid, points) -> int:
     path = atlas_path(spec.name, fp, args.threshold, args.atlas_dir)
     if not path.is_file():
         t = f"{args.threshold:g}".replace(".", "p")
-        candidates = sorted(path.parent.glob(
-            f"atlas-{_slug(spec.name)}-t{t}-*.jsonl"))
+        candidates = [
+            c for c in sorted(path.parent.glob(
+                f"atlas-{_slug(spec.name)}-t{t}-*.jsonl"))
+            # Un-merged shard files are partial by construction; replay
+            # the canonical atlas (tools/atlas_merge.py) instead.
+            if not re.search(r"-shard\d+$", c.stem)
+        ]
         if len(candidates) == 1:
             _note(f"no atlas for this fingerprint; evaluating the only "
                   f"match {candidates[0].name}", args.quiet)

@@ -1,0 +1,539 @@
+"""Adaptive boundary-refinement sweeps against planted-mask ground truth
+(ISSUE 7).
+
+The oracles are *known by construction* (:mod:`repro.core.synthetic`): a
+mask function decides which grid points are anomalous, the dense grid
+evaluated through the mask is ground truth, and the property tests pin the
+engine's contract against it — ≥ 0.9 frontier recall at ≤ 40 % of the
+dense measurement count, refinement candidates always on-grid and never
+already measured, kill/resume convergence to the same measured set, and
+shard-merge(k parts) ≡ the unsharded run point-for-point.
+"""
+
+import importlib.util
+import json
+import pathlib
+import sys
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.adaptive import (
+    adaptive_sweep,
+    boundary_cells,
+    refinement_candidates,
+    seed_points,
+)
+from repro.core.anomaly import cluster_regions
+from repro.core.expressions import GridSpec
+from repro.core.profile_store import HardwareFingerprint
+from repro.core.sweep import (
+    AnomalyAtlas,
+    AtlasError,
+    atlas_shard_path,
+    main as sweep_main,
+)
+from repro.core.synthetic import (
+    BlobMask,
+    EmptyMask,
+    MaskRunner,
+    PlantedSpec,
+    dense_oracle,
+    frontier_recall,
+    planted_masks,
+    true_frontier,
+)
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+FP = HardwareFingerprint(backend="blas", device="testdev", dtype="float64")
+SPEC = PlantedSpec()
+
+# 20x20 uniform grid: large enough that regions dominate the frontier and
+# a 40 % budget is a real constraint, small enough for a fast suite.
+GRID = GridSpec.uniform(tuple(range(10, 210, 10)), 2, name="planted20")
+BUDGET = int(0.40 * GRID.n_points)  # the ISSUE's headline budget: 160
+
+
+def _merge_mod():
+    if "atlas_merge" in sys.modules:
+        return sys.modules["atlas_merge"]
+    spec = importlib.util.spec_from_file_location(
+        "atlas_merge", REPO / "tools" / "atlas_merge.py")
+    mod = importlib.util.module_from_spec(spec)
+    # registered so dataclasses can resolve the module's PEP 563 string
+    # annotations when building MergeReport
+    sys.modules["atlas_merge"] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+class KillingRunner:
+    """MaskRunner that dies after ``fail_after`` timings (kill mid-round)."""
+
+    def __init__(self, mask, fail_after):
+        self.inner = MaskRunner(mask)
+        self.fail_after = fail_after
+        self.count = 0
+
+    def make_operands(self, alg):
+        return {}
+
+    def time_algorithm(self, alg, operands=None):
+        self.count += 1
+        if self.count > self.fail_after:
+            raise RuntimeError("simulated kill")
+        return self.inner.time_algorithm(alg, operands)
+
+
+# ------------------------------------------------------------ seed lattice --
+
+@settings(max_examples=40, deadline=None)
+@given(stride=st.integers(min_value=1, max_value=9),
+       nx=st.integers(min_value=2, max_value=12),
+       ny=st.integers(min_value=2, max_value=12))
+def test_seed_points_lattice_properties(stride, nx, ny):
+    axes = (tuple(range(0, 7 * nx, 7)), tuple(range(100, 100 + 2 * ny, 2)))
+    grid = GridSpec(name="g", axes=axes)
+    pts = seed_points(grid, stride)
+    assert len(set(pts)) == len(pts)            # no duplicates
+    assert set(pts) <= set(grid.points())       # always on-grid
+    for d in (0, 1):                            # endpoints bracket the grid
+        vals = {p[d] for p in pts}
+        assert axes[d][0] in vals and axes[d][-1] in vals
+    if stride == 1:
+        assert set(pts) == set(grid.points())
+    assert pts == sorted(pts)                   # deterministic row-major
+
+
+def test_seed_points_rejects_bad_stride():
+    with pytest.raises(ValueError, match="stride"):
+        seed_points(GRID, 0)
+
+
+# --------------------------------------------------- the headline contract --
+
+@pytest.mark.parametrize("name", sorted(planted_masks(GRID)))
+def test_recall_at_forty_percent_of_dense_budget(name):
+    """≥ 0.9 frontier recall at ≤ 40 % of the dense measurement count."""
+    mask = planted_masks(GRID)[name]
+    res = adaptive_sweep(SPEC, GRID, BUDGET, runner=MaskRunner(mask))
+    # the budget is honoured: trajectory == measured set, ≤ 40 % of dense
+    assert res.spent <= BUDGET
+    assert len(res.known) == res.spent == res.n_measured
+    assert sum(r.n_admitted for r in res.rounds) == res.spent
+    assert res.stopped in ("converged", "budget")
+    # every verdict agrees with the planted ground truth
+    oracle = dense_oracle(mask, GRID)
+    for p, v in res.verdicts().items():
+        assert v == oracle[p], p
+    recall = frontier_recall(res.known, true_frontier(mask, GRID))
+    assert recall >= 0.9, (name, recall, res.spent)
+
+
+def test_empty_and_full_masks_converge_at_the_seed():
+    for name in ("empty", "full"):
+        res = adaptive_sweep(SPEC, GRID, BUDGET,
+                             runner=MaskRunner(planted_masks(GRID)[name]))
+        assert res.stopped == "converged"
+        assert res.n_refine_rounds == 0
+        assert set(res.known) == set(seed_points(GRID, 4))
+        assert res.frontier() == set()          # nothing to localize
+
+
+# --------------------------------------------------- refinement candidates --
+
+@settings(max_examples=25, deadline=None)
+@given(cx=st.integers(min_value=10, max_value=200),
+       cy=st.integers(min_value=10, max_value=200),
+       r=st.integers(min_value=5, max_value=80),
+       stride=st.integers(min_value=2, max_value=7))
+def test_candidates_always_on_grid_and_never_measured(cx, cy, r, stride):
+    """Refinement never proposes an off-grid or already-measured point,
+    and the localized frontier it converges on is a subset of the true
+    one (boundary cells straddle a real verdict flip by construction)."""
+    mask = BlobMask(center=(cx, cy), radius=float(r))
+    oracle = dense_oracle(mask, GRID)
+    grid_pts = set(GRID.points())
+    verdicts = {p: oracle[p] for p in seed_points(GRID, stride)}
+    for _ in range(40):
+        cands = refinement_candidates(verdicts, GRID)
+        assert len(set(cands)) == len(cands)
+        for c in cands:
+            assert c in grid_pts, c
+            assert c not in verdicts, c
+        assert boundary_cells(verdicts, GRID) <= true_frontier(mask, GRID)
+        if not cands:
+            return
+        for c in cands:
+            verdicts[c] = oracle[c]
+    pytest.fail("refinement did not converge in 40 rounds")
+
+
+def test_candidates_reject_off_grid_verdicts():
+    with pytest.raises(ValueError, match="off-grid"):
+        refinement_candidates({(15, 10): True, (10, 10): False}, GRID)
+    with pytest.raises(ValueError, match="dims"):
+        refinement_candidates({(10, 10, 10): True}, GRID)
+
+
+# --------------------------------------------------------- budget + rounds --
+
+def test_budget_is_a_hard_cap_on_the_trajectory():
+    mask = planted_masks(GRID)["stripe"]
+    full = adaptive_sweep(SPEC, GRID, GRID.n_points,
+                          runner=MaskRunner(mask))
+    assert full.stopped == "converged"
+    budget = full.spent - 5
+    res = adaptive_sweep(SPEC, GRID, budget, runner=MaskRunner(mask))
+    assert res.stopped == "budget"
+    assert res.spent == budget == len(res.known)
+    # deterministic trajectory: the capped run is a prefix of the full one
+    assert set(res.known) <= set(full.known)
+
+
+def test_rounds_zero_measures_only_the_seed():
+    res = adaptive_sweep(SPEC, GRID, GRID.n_points, rounds=0,
+                         runner=MaskRunner(planted_masks(GRID)["blob"]))
+    assert res.stopped == "rounds"
+    assert res.n_refine_rounds == 0
+    assert set(res.known) == set(seed_points(GRID, 4))
+
+
+def test_adaptive_validation_errors(tmp_path):
+    r = MaskRunner(EmptyMask())
+    with pytest.raises(ValueError, match="budget"):
+        adaptive_sweep(SPEC, GRID, 0, runner=r)
+    with pytest.raises(ValueError, match="rounds"):
+        adaptive_sweep(SPEC, GRID, 5, rounds=-1, runner=r)
+    with pytest.raises(ValueError, match="stride"):
+        adaptive_sweep(SPEC, GRID, 5, seed_stride=0, runner=r)
+    with pytest.raises(ValueError, match="grid has 3 axes"):
+        adaptive_sweep(SPEC, GridSpec.uniform((10, 20), 3), 5, runner=r)
+    with pytest.raises(ValueError, match="0 <= k < n"):
+        adaptive_sweep(SPEC, GRID, 5, shard=(2, 2), runner=r)
+    with pytest.raises(ValueError, match="shard mode needs"):
+        adaptive_sweep(SPEC, GRID, 5, shard=(0, 2), runner=r)
+    canonical = AnomalyAtlas(tmp_path / "c.jsonl", FP, SPEC.name, 0.10)
+    with pytest.raises(ValueError, match="shard"):
+        adaptive_sweep(SPEC, GRID, 5, shard=(0, 2), atlas=canonical,
+                       runner=r)
+
+
+# ------------------------------------------------------------- kill/resume --
+
+@pytest.mark.parametrize("fail_after", (7, 91, 200))
+def test_kill_resume_converges_to_the_same_measured_set(tmp_path,
+                                                        fail_after):
+    """A sweep killed mid-round, restarted with the same arguments,
+    converges to exactly the measured set of an uninterrupted run."""
+    mask = planted_masks(GRID)["blob"]
+    ref = adaptive_sweep(
+        SPEC, GRID, BUDGET, runner=MaskRunner(mask),
+        atlas=AnomalyAtlas(tmp_path / "ref.jsonl", FP, SPEC.name, 0.10))
+
+    path = tmp_path / "killed.jsonl"
+    atlas = AnomalyAtlas(path, FP, SPEC.name, 0.10, chunk_size=4)
+    with pytest.raises(RuntimeError, match="simulated kill"):
+        adaptive_sweep(SPEC, GRID, BUDGET, atlas=atlas,
+                       runner=KillingRunner(mask, fail_after))
+    survivors = {r.point
+                 for r in AnomalyAtlas(path, FP, SPEC.name, 0.10).records()}
+    assert survivors < set(ref.known)           # partial, but a subset
+
+    resumed_atlas = AnomalyAtlas(path, FP, SPEC.name, 0.10)
+    res = adaptive_sweep(SPEC, GRID, BUDGET, atlas=resumed_atlas,
+                         runner=MaskRunner(mask))
+    assert set(res.known) == set(ref.known)     # same measured set
+    assert res.verdicts() == ref.verdicts()
+    assert res.spent == ref.spent               # same trajectory accounting
+    assert res.stopped == ref.stopped
+    # replayed points cost trajectory budget but zero new measurements
+    assert res.n_measured == len(ref.known) - len(survivors)
+
+
+def test_resumed_adaptive_run_honors_remaining_budget(tmp_path):
+    """ISSUE 7 satellite: a resumed adaptive run spends only what remains
+    of the budget — replayed rounds are admitted to the trajectory (so
+    the cap still binds globally) but cost zero new measurements."""
+    mask = planted_masks(GRID)["blob"]
+    ref = adaptive_sweep(SPEC, GRID, BUDGET, runner=MaskRunner(mask))
+
+    path = tmp_path / "resume.jsonl"
+    first = adaptive_sweep(
+        SPEC, GRID, BUDGET, rounds=1, runner=MaskRunner(mask),
+        atlas=AnomalyAtlas(path, FP, SPEC.name, 0.10))
+    assert first.stopped == "rounds"
+    assert 0 < first.spent < ref.spent
+
+    resumed = adaptive_sweep(
+        SPEC, GRID, BUDGET, runner=MaskRunner(mask),
+        atlas=AnomalyAtlas(path, FP, SPEC.name, 0.10))
+    assert resumed.spent == ref.spent <= BUDGET
+    assert resumed.n_measured == ref.spent - first.spent
+    assert first.n_measured + resumed.n_measured == ref.n_measured
+    assert set(resumed.known) == set(ref.known)
+    assert resumed.verdicts() == ref.verdicts()
+
+
+# ----------------------------------------------------------- shard fan-out --
+
+def _lockstep(tmp_path, mask, n_hosts, budget=None):
+    """Re-invoke every host until none is awaiting siblings (the
+    documented ops recipe for the CLI's exit-3 state)."""
+    budget = BUDGET if budget is None else budget
+    paths = [atlas_shard_path(SPEC.name, FP, 0.10, k, tmp_path)
+             for k in range(n_hosts)]
+    last = None
+    for _ in range(40):
+        done = True
+        for k in range(n_hosts):
+            atlas = AnomalyAtlas(paths[k], FP, SPEC.name, 0.10,
+                                 shard=(k, n_hosts))
+            last = adaptive_sweep(SPEC, GRID, budget, atlas=atlas,
+                                  shard=(k, n_hosts),
+                                  runner=MaskRunner(mask))
+            if last.stopped == "awaiting-siblings":
+                done = False
+        if done:
+            return paths, last
+    pytest.fail(f"{n_hosts}-way shard lockstep did not converge")
+
+
+@pytest.mark.parametrize("n_hosts", (2, 3))
+def test_shard_merge_equals_unsharded_point_for_point(tmp_path, n_hosts):
+    mask = planted_masks(GRID)["multi"]
+    ref = adaptive_sweep(
+        SPEC, GRID, BUDGET, runner=MaskRunner(mask),
+        atlas=AnomalyAtlas(tmp_path / "ref.jsonl", FP, SPEC.name, 0.10))
+    paths, last = _lockstep(tmp_path, mask, n_hosts)
+    assert last.stopped == ref.stopped
+
+    # shard files partition the trajectory: disjoint, union == unsharded
+    per_shard = [
+        {r.point for r in AnomalyAtlas(p, FP, SPEC.name, 0.10,
+                                       shard=(k, n_hosts)).records()}
+        for k, p in enumerate(paths)]
+    union = set().union(*per_shard)
+    assert sum(len(s) for s in per_shard) == len(union)
+    assert union == set(ref.known)
+
+    merge = _merge_mod()
+    out = tmp_path / "merged.jsonl"
+    report = merge.merge_shards(paths, out)
+    assert report.n_records == len(ref.known)
+    assert report.n_duplicates == report.n_conflicts == 0
+    # the merged file is a canonical atlas, identical to the unsharded one
+    merged = {r.point: (r.cls, r.times, r.flops)
+              for r in AnomalyAtlas(out, FP, SPEC.name, 0.10).records()}
+    unsharded = {
+        r.point: (r.cls, r.times, r.flops)
+        for r in AnomalyAtlas(tmp_path / "ref.jsonl", FP, SPEC.name,
+                              0.10).records()}
+    assert merged == unsharded
+
+
+def test_shard_atlas_never_mixes_with_canonical(tmp_path):
+    mask = planted_masks(GRID)["blob"]
+    spath = atlas_shard_path(SPEC.name, FP, 0.10, 0, tmp_path)
+    adaptive_sweep(SPEC, GRID, 40, shard=(0, 2), runner=MaskRunner(mask),
+                   atlas=AnomalyAtlas(spath, FP, SPEC.name, 0.10,
+                                      shard=(0, 2)))
+    # a shard file must not silently resume as the canonical atlas...
+    with pytest.raises(AtlasError, match="atlas_merge"):
+        AnomalyAtlas(spath, FP, SPEC.name, 0.10)
+    # ...nor as a different shard of the fan-out
+    with pytest.raises(AtlasError, match="shard"):
+        AnomalyAtlas(spath, FP, SPEC.name, 0.10, shard=(1, 2))
+    # and a canonical atlas cannot be reopened as a shard
+    cpath = tmp_path / "canonical.jsonl"
+    adaptive_sweep(SPEC, GRID, 40, runner=MaskRunner(mask),
+                   atlas=AnomalyAtlas(cpath, FP, SPEC.name, 0.10))
+    with pytest.raises(AtlasError, match="shard"):
+        AnomalyAtlas(cpath, FP, SPEC.name, 0.10, shard=(0, 2))
+
+
+# ------------------------------------------------------------- atlas merge --
+
+def test_merge_rejects_mismatched_headers(tmp_path):
+    mask = planted_masks(GRID)["blob"]
+    a = atlas_shard_path(SPEC.name, FP, 0.10, 0, tmp_path)
+    adaptive_sweep(SPEC, GRID, 40, shard=(0, 2), runner=MaskRunner(mask),
+                   atlas=AnomalyAtlas(a, FP, SPEC.name, 0.10,
+                                      shard=(0, 2)),
+                   threshold=0.10)
+    b = atlas_shard_path(SPEC.name, FP, 0.05, 1, tmp_path)
+    adaptive_sweep(SPEC, GRID, 40, shard=(1, 2), runner=MaskRunner(mask),
+                   atlas=AnomalyAtlas(b, FP, SPEC.name, 0.05,
+                                      shard=(1, 2)),
+                   threshold=0.05)
+    merge = _merge_mod()
+    with pytest.raises(merge.MergeError, match="threshold"):
+        merge.merge_shards([a, b], tmp_path / "out.jsonl")
+    assert not (tmp_path / "out.jsonl").exists()
+    with pytest.raises(merge.MergeError, match="no shard files"):
+        merge.merge_shards([], tmp_path / "out.jsonl")
+
+
+def test_merge_dedups_first_writer_wins_and_reports_conflicts(tmp_path):
+    mask = planted_masks(GRID)["blob"]
+    paths, _ = _lockstep(tmp_path, mask, 2, budget=60)
+    # replay one of shard 0's records into shard 1 with a tampered payload
+    lines0 = paths[0].read_text().splitlines()
+    dup = json.loads(lines0[1])
+    dup["times"] = {k: v + 1.0 for k, v in dup["times"].items()}
+    with paths[1].open("a") as f:
+        f.write(json.dumps(dup) + "\n")
+
+    merge = _merge_mod()
+    report = merge.merge_shards(paths, tmp_path / "merged.jsonl")
+    assert report.n_duplicates == 1 and report.n_conflicts == 1
+    assert "conflicting payloads" in report.summary()
+    # first writer won: the merged record matches shard 0's original
+    merged = {r.point: r
+              for r in AnomalyAtlas(tmp_path / "merged.jsonl", FP,
+                                    SPEC.name, 0.10).records()}
+    point = tuple(dup["point"])
+    kept = merged[point].times
+    assert kept != dup["times"]
+
+
+def test_merge_tolerates_torn_tails_but_not_torn_headers(tmp_path):
+    mask = planted_masks(GRID)["stripe"]
+    paths, _ = _lockstep(tmp_path, mask, 2, budget=60)
+    n_before = sum(
+        len(AnomalyAtlas(p, FP, SPEC.name, 0.10, shard=(k, 2)).records())
+        for k, p in enumerate(paths))
+    with paths[0].open("a") as f:
+        f.write('{"point": [70, 7')        # host killed mid-write
+    merge = _merge_mod()
+    report = merge.merge_shards(paths, tmp_path / "merged.jsonl")
+    assert report.n_torn == 1
+    assert "torn tail lines tolerated: 1" in report.summary()
+    assert report.n_records == n_before
+    # a torn *header* is not tolerated: the configuration is unreadable
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text('{"kind": "head')
+    with pytest.raises(merge.MergeError, match="header"):
+        merge.merge_shards([bad])
+    not_atlas = tmp_path / "not_atlas.jsonl"
+    not_atlas.write_text('{"kind": "other"}\n')
+    with pytest.raises(merge.MergeError, match="not an atlas header"):
+        merge.merge_shards([not_atlas])
+
+
+def test_merge_cli_dry_run_and_write(tmp_path, capsys):
+    mask = planted_masks(GRID)["blob"]
+    paths, _ = _lockstep(tmp_path, mask, 2, budget=60)
+    merge = _merge_mod()
+    assert merge.main([str(p) for p in paths]) == 0   # dry run: no --out
+    out = capsys.readouterr().out
+    assert "merged 2 shard(s)" in out and "->" not in out.splitlines()[0]
+    out_path = tmp_path / "merged.jsonl"
+    assert merge.main([str(p) for p in paths] + ["-o", str(out_path)]) == 0
+    assert out_path.is_file()
+    # a shard swept under a different threshold aborts with exit 1
+    clash = tmp_path / "clash.jsonl"
+    head = json.loads(paths[0].read_text().splitlines()[0])
+    head["threshold"] = 0.05
+    clash.write_text(json.dumps(head) + "\n")
+    assert merge.main([str(paths[0]), str(clash)]) == 1
+    err = capsys.readouterr().err
+    assert "atlas merge failed" in err and "threshold" in err
+
+
+# -------------------------------------------------- region regressions ---
+
+def test_cluster_regions_names_off_grid_point_and_axis():
+    """ISSUE 7 satellite: a bare KeyError became a ValueError naming the
+    offending point and axis (reachable from adaptive refinement)."""
+    axes = [(10, 20), (10, 20)]
+    with pytest.raises(ValueError,
+                       match=r"point \(10, 15\) is off-grid: value 15 is "
+                             r"not on axis 1"):
+        cluster_regions({(10, 15): (0.1, 0.1)}, axes)
+    with pytest.raises(ValueError, match=r"has 3 dims but the grid has 2"):
+        cluster_regions({(10, 10, 10): (0.1, 0.1)}, axes)
+
+
+def test_adaptive_regions_match_oracle_regions():
+    """Regions clustered from the sparse adaptive point set agree with the
+    dense oracle on count and bounding boxes for the multi-blob plant."""
+    mask = planted_masks(GRID)["multi"]
+    res = adaptive_sweep(SPEC, GRID, BUDGET, runner=MaskRunner(mask))
+    dense = cluster_regions(
+        {p: (0.5, 0.5) for p, v in dense_oracle(mask, GRID).items() if v},
+        GRID.axes)
+    got = res.regions()
+    assert len(dense) == 2
+    # sparse clustering can split a region (interior seed points are not
+    # grid-adjacent to the frontier ring), but the two largest sparse
+    # regions recover the oracle regions' bounding boxes exactly
+    assert sorted((r.lo, r.hi) for r in got[:2]) == \
+        sorted((r.lo, r.hi) for r in dense)
+
+
+# -------------------------------------------------------------------- CLI --
+
+def test_cli_adaptive_writes_replayable_atlas(tmp_path, capsys):
+    args = ["--expr", "aatb", "--grid", "smoke", "--mode", "adaptive",
+            "--budget", "6", "--reps", "1", "--no-flush",
+            "--atlas-dir", str(tmp_path), "--quiet"]
+    assert sweep_main(args) == 0
+    out1 = capsys.readouterr().out
+    assert "budget=6 spent=6 measured=6" in out1
+    assert "stopped=budget" in out1
+    assert len(list(tmp_path.glob("atlas-aatb-*.jsonl"))) == 1
+    # re-run: the trajectory replays from the atlas, zero new measurements
+    assert sweep_main(args) == 0
+    out2 = capsys.readouterr().out
+    assert "spent=6 measured=0" in out2
+
+
+def test_cli_adaptive_flag_validation(tmp_path, capsys):
+    base = ["--expr", "aatb", "--grid", "smoke",
+            "--atlas-dir", str(tmp_path), "--quiet"]
+    with pytest.raises(SystemExit):
+        sweep_main(base + ["--mode", "adaptive"])          # no --budget
+    with pytest.raises(SystemExit):
+        sweep_main(base + ["--budget", "6"])               # not adaptive
+    with pytest.raises(SystemExit):
+        sweep_main(base + ["--shard", "0/2"])              # not adaptive
+    with pytest.raises(SystemExit):
+        sweep_main(base + ["--mode", "adaptive", "--budget", "6",
+                           "--limit", "3"])                # wrong knob
+    capsys.readouterr()
+    # malformed K/N is a usage error (exit 2), not a crash
+    assert sweep_main(base + ["--mode", "adaptive", "--budget", "6",
+                              "--shard", "2/2"]) == 2
+    assert "0 <= K < N" in capsys.readouterr().err
+
+
+def test_cli_sharded_adaptive_lockstep_and_merge(tmp_path, capsys):
+    base = ["--expr", "aatb", "--grid", "smoke", "--mode", "adaptive",
+            "--budget", "8", "--reps", "1", "--no-flush",
+            "--atlas-dir", str(tmp_path), "--quiet"]
+    codes = set()
+    for _ in range(10):
+        rcs = [sweep_main(base + ["--shard", f"{k}/2"]) for k in (0, 1)]
+        codes.update(rcs)
+        if rcs == [0, 0]:
+            break
+    else:
+        pytest.fail("CLI shard lockstep did not converge")
+    assert 3 in codes             # somebody had to wait for a sibling
+    capsys.readouterr()
+
+    shards = sorted(tmp_path.glob("atlas-aatb-*-shard*.jsonl"))
+    assert len(shards) == 2
+    merge = _merge_mod()
+    out = tmp_path / "merged.jsonl"
+    report = merge.merge_shards(shards, out)
+    assert report.n_records == 8 and report.n_duplicates == 0
+    # the merged file is a canonical atlas: header without a shard
+    # identity, then one sorted record line per measured point
+    lines = out.read_text().splitlines()
+    head = json.loads(lines[0])
+    assert head["kind"] == "header" and "shard" not in head
+    pts = [tuple(json.loads(li)["point"]) for li in lines[1:]]
+    assert len(pts) == 8 and pts == sorted(pts)

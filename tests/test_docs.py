@@ -17,7 +17,7 @@ def _load_checker():
 
 def test_docs_pages_exist():
     for page in ("architecture.md", "calibration.md", "discriminants.md",
-                 "serving.md"):
+                 "serving.md", "sweeping.md"):
         path = REPO / "docs" / page
         assert path.is_file(), page
         assert path.read_text().strip().startswith("#"), page
@@ -26,10 +26,30 @@ def test_docs_pages_exist():
 def test_readme_links_into_docs():
     text = (REPO / "README.md").read_text()
     for page in ("docs/architecture.md", "docs/calibration.md",
-                 "docs/discriminants.md", "docs/serving.md"):
+                 "docs/discriminants.md", "docs/serving.md",
+                 "docs/sweeping.md"):
         assert page in text, page
     assert "repro.core.sweep" in text  # quickstart runs the sweep engine
     assert "tools/loadtest.py" in text  # serving quickstart
+    assert "--mode adaptive" in text  # adaptive quickstart
+
+
+def test_sweeping_guide_covers_the_contracts():
+    """docs/sweeping.md documents what the adaptive engine enforces."""
+    text = (REPO / "docs" / "sweeping.md").read_text()
+    for needle in (
+        "--mode adaptive",          # the CLI entry point
+        "--budget",                 # the budget contract
+        "--seed-stride",            # tuning knob + its caveat...
+        "missed entirely",          # ...regions narrower than the stride
+        "--shard",                  # multi-host fan-out
+        "awaiting-siblings",        # exit-3 rerun protocol
+        "tools/atlas_merge.py",     # shard reconciliation
+        "first writer",             # merge dedup rule
+        "torn final line",          # crash tolerance
+        "synthetic.py",             # planted ground truth
+    ):
+        assert needle in text, needle
 
 
 def test_serving_guide_covers_the_contracts():

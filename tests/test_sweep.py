@@ -1,13 +1,20 @@
 """Sweep engine: atlas resumability (kill mid-sweep, restart, no duplicate
 instances), sharding equivalence (serial vs process-pool sweeps agree),
 region clustering on synthetic masks, batched kernel dedup, and the CLI
-(ISSUE 2)."""
+(ISSUE 2). Crash/restart interleavings over adaptive shard files and
+region-ordering determinism ride along from ISSUE 7."""
 
 import json
+import random
+import tempfile
+from pathlib import Path
 
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
-from repro.core.anomaly import cluster_regions
+from repro.core.adaptive import adaptive_sweep
+from repro.core.anomaly import cluster_regions, region_summary
 from repro.core.profile_store import HardwareFingerprint
 from repro.core.perfmodel import AnalyticalTPUProfile, TableProfile
 from repro.core.sweep import (
@@ -18,6 +25,7 @@ from repro.core.sweep import (
     AtlasError,
     GridSpec,
     atlas_path,
+    atlas_shard_path,
     benchmark_unique_calls,
     cluster_sweep,
     collect_unique_calls,
@@ -26,6 +34,7 @@ from repro.core.sweep import (
     predict_classifications,
     sweep,
 )
+from repro.core.synthetic import BlobMask, MaskRunner, PlantedSpec, dense_oracle
 from repro.core.experiments import experiment1_random_search
 from repro.core.flops import gemm, syrk
 
@@ -192,6 +201,10 @@ def test_torn_tail_line_is_tolerated(tmp_path):
     res2 = sweep(GRAM_AATB, GRID.points()[:8], runner=DeterministicRunner(),
                  atlas=resumed)
     assert res2.n_measured == 2 and res2.n_skipped == 6
+    # records appended after the torn tail survive the next load — the
+    # flush restores the newline the torn line lost, instead of merging
+    # the first new record into the garbage
+    assert len(AnomalyAtlas(path, FP, GRAM_AATB.name, 0.10)) == 8
 
 
 def test_torn_header_recovers_with_sidecar(tmp_path):
@@ -442,3 +455,165 @@ def test_cli_predict_mode_feeds_profile_cache(tmp_path, monkeypatch,
 def test_atlas_path_is_fingerprint_keyed(tmp_path):
     p = atlas_path("AATB", FP, 0.10, tmp_path)
     assert p.name == "atlas-aatb-t0p1-blas-testdev-float64.jsonl"
+
+
+# ----------------------------------- budgeted sweeps vs the atlas (ISSUE 7) --
+
+def test_max_instances_budget_is_not_consumed_by_cached_points(tmp_path):
+    """Atlas-cached points are excluded before the max_instances cut, so
+    the budget buys new measurements only."""
+    path = tmp_path / "a.jsonl"
+    sweep(GRAM_AATB, GRID.points()[:10], runner=DeterministicRunner(),
+          atlas=AnomalyAtlas(path, FP, GRAM_AATB.name, 0.10))
+    atlas = AnomalyAtlas(path, FP, GRAM_AATB.name, 0.10)
+    res = sweep(GRAM_AATB, GRID.points(), runner=DeterministicRunner(),
+                atlas=atlas, max_instances=5)
+    assert res.n_skipped == 10      # every cached point still served
+    assert res.n_measured == 5      # the budget bought 5 *new* points
+    assert len(atlas) == 15
+    # the 5 new points are the first 5 uncached ones, in request order
+    cached = set(GRID.points()[:10])
+    new = [r.point for r in res.records if r.point not in cached]
+    assert new == GRID.points()[10:15]
+
+
+# ----------------------- adaptive shard crash/restart interleaving (ISSUE 7) --
+
+PLANTED = PlantedSpec()
+PGRID = GridSpec.uniform(tuple(range(10, 110, 10)), 2, name="planted10")
+PMASK = BlobMask(center=(50, 50), radius=24.0)
+
+
+class RecordingMaskRunner:
+    """MaskRunner that records which points it timed and can crash."""
+
+    def __init__(self, mask, fail_after=None):
+        self.inner = MaskRunner(mask)
+        self.fail_after = fail_after
+        self.count = 0
+        self.timed = set()
+
+    def make_operands(self, alg):
+        return {}
+
+    def time_algorithm(self, alg, operands=None):
+        self.count += 1
+        if self.fail_after is not None and self.count > self.fail_after:
+            raise RuntimeError("simulated crash")
+        self.timed.add(alg.point)
+        return self.inner.time_algorithm(alg, operands)
+
+
+@settings(max_examples=8, deadline=None)
+@given(kill_a=st.integers(min_value=1, max_value=40),
+       kill_b=st.integers(min_value=1, max_value=40),
+       tear=st.sampled_from((False, True)))
+def test_shard_crash_restart_never_loses_or_double_measures(
+        kill_a, kill_b, tear):
+    """Arbitrary crash/restart interleavings over the per-host shard files
+    never lose a completed (flushed) measurement and never re-measure a
+    point any host already persisted — the torn-tail fixtures of the dense
+    engine, replayed through the sharded adaptive trajectory."""
+    budget = 60
+    with tempfile.TemporaryDirectory() as td:
+        paths = [atlas_shard_path(PLANTED.name, FP, 0.10, k, Path(td))
+                 for k in (0, 1)]
+
+        def persisted():
+            out = []
+            for k, p in enumerate(paths):
+                if p.is_file():
+                    a = AnomalyAtlas(p, FP, PLANTED.name, 0.10,
+                                     shard=(k, 2))
+                    out.append({r.point for r in a.records()})
+                else:
+                    out.append(set())
+            return out
+
+        last = {}
+
+        def step(host, kill=None):
+            before = persisted()
+            runner = RecordingMaskRunner(PMASK, kill)
+            atlas = AnomalyAtlas(paths[host], FP, PLANTED.name, 0.10,
+                                 chunk_size=3, shard=(host, 2))
+            stopped = None
+            try:
+                last[host] = adaptive_sweep(
+                    PLANTED, PGRID, budget, atlas=atlas, shard=(host, 2),
+                    runner=runner)
+                stopped = last[host].stopped
+            except RuntimeError:
+                pass                      # the simulated crash
+            after = persisted()
+            for b, a in zip(before, after):
+                assert b <= a             # completed measurements survive
+            # nothing persisted anywhere is ever re-measured
+            assert not (runner.timed & (before[0] | before[1]))
+            if tear and paths[host].is_file():
+                with paths[host].open("a") as f:
+                    f.write('{"point": [70, 7')   # kill mid-write
+            return stopped
+
+        step(0, kill_a)                   # both hosts crash once...
+        step(1, kill_b)
+        for _ in range(30):               # ...then clean lockstep reruns
+            r0 = step(0)
+            r1 = step(1)
+            if r0 != "awaiting-siblings" and r1 != "awaiting-siblings":
+                break
+        else:
+            pytest.fail("shard lockstep did not converge after crashes")
+
+        # both hosts agree on the full trajectory, the shard files union
+        # to it exactly, and every verdict matches the planted oracle
+        union = set().union(*persisted())
+        assert union == set(last[0].known) == set(last[1].known)
+        oracle = dense_oracle(PMASK, PGRID)
+        for p, inst in last[0].known.items():
+            assert inst.cls.is_anomaly == oracle[p], p
+
+
+# ------------------------------- region ordering determinism (ISSUE 7) --
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6),
+       n=st.integers(min_value=1, max_value=20))
+def test_cluster_regions_ordering_is_deterministic(seed, n):
+    """Region order is a pure function of the point set — (-size, first
+    member) with sorted members — regardless of insertion order."""
+    rng = random.Random(seed)
+    axes = [tuple(range(10, 60, 10))] * 2
+    cells = [(x, y) for x in axes[0] for y in axes[1]]
+    scores = {p: (rng.random(), rng.random()) for p in rng.sample(cells, n)}
+    regions = cluster_regions(scores, axes)
+    items = list(scores.items())
+    rng.shuffle(items)
+    again = cluster_regions(dict(items), axes)   # permuted insertion order
+    assert regions == again
+    keys = [(-r.size, r.points[0]) for r in regions]
+    assert keys == sorted(keys)
+    for r in regions:
+        assert list(r.points) == sorted(r.points)
+        assert r.lo == tuple(min(p[d] for p in r.points) for d in (0, 1))
+        assert r.hi == tuple(max(p[d] for p in r.points) for d in (0, 1))
+    assert sum(r.size for r in regions) == n
+    assert region_summary(regions, len(cells)) == \
+        region_summary(again, len(cells))
+
+
+def test_region_ordering_ties_single_point_and_full_grid():
+    axes = [(1, 2, 3, 4), (1, 2, 3, 4)]
+    # equal-size regions tie-break on the smallest member point
+    tied = cluster_regions({(3, 3): (.2, .2), (1, 1): (.1, .1)}, axes)
+    assert [r.points for r in tied] == [((1, 1),), ((3, 3),)]
+    # single point: degenerate bbox, mean == max
+    [r] = cluster_regions({(2, 3): (.5, .6)}, axes)
+    assert r.size == 1 and r.lo == r.hi == (2, 3)
+    assert r.mean_time_score == r.max_time_score == .5
+    assert r.mean_flop_score == r.max_flop_score == .6
+    # full grid: one region spanning the whole bbox
+    full = {(x, y): (.1, .2) for x in axes[0] for y in axes[1]}
+    [r] = cluster_regions(full, axes)
+    assert r.size == 16 and r.lo == (1, 1) and r.hi == (4, 4)
+    assert "16/16 (100.0%) in 1 region(s)" in region_summary([r], 16)

@@ -1,0 +1,193 @@
+#!/usr/bin/env python3
+"""Merge per-host anomaly-atlas shard files into one canonical atlas.
+
+A sharded adaptive sweep (``python -m repro.core.sweep --mode adaptive
+--shard k/n``, see ``repro.core.adaptive``) leaves one
+``atlas-…-shardK.jsonl`` file per host, each carrying the full sweep
+configuration in its header. This tool reconciles them::
+
+    python tools/atlas_merge.py --out atlas-merged.jsonl shards/atlas-*-shard*.jsonl
+
+Contract (per Peise & Bientinesi, arXiv:1409.8602, measurements are only
+comparable under matching hardware/cache conditions):
+
+* every shard's header must agree on schema version, spec name, threshold
+  and hardware fingerprint — any mismatch aborts the merge (exit 1);
+* duplicate points are deduplicated deterministically: the first writer
+  in command-line shard order wins, and the drop is reported (duplicates
+  whose payloads actually differ are reported separately as conflicts);
+* a torn final line in any shard (a host killed mid-write) is tolerated
+  and counted, exactly like ``AnomalyAtlas._load``;
+* the output is a canonical atlas: the shared header without the shard
+  identity, then one record per point sorted by point — byte-stable for
+  a given input set, resumable by ``AnomalyAtlas``, written atomically.
+
+Standalone on purpose (stdlib only): runs without PYTHONPATH=src so ops
+hosts that only collect shard files need nothing installed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+
+class MergeError(RuntimeError):
+    """Shard files disagree on the sweep configuration (or are not shards)."""
+
+
+def _canonical(header: dict) -> dict:
+    """Header identity that must match across shards (shard id stripped)."""
+    return {k: v for k, v in header.items() if k != "shard"}
+
+
+def load_shard(path: Path) -> Tuple[dict, List[Tuple[tuple, dict]], int]:
+    """One shard file -> (header, [(point, record), ...], torn_lines).
+
+    Tolerates a torn tail (undecodable or field-incomplete line) the same
+    way the atlas loader does; a missing/torn *header* is a MergeError —
+    a shard whose configuration cannot be read must not be merged.
+    """
+    with path.open() as f:
+        first = f.readline()
+        try:
+            header = json.loads(first)
+        except json.JSONDecodeError:
+            raise MergeError(f"{path}: unreadable header line")
+        if not isinstance(header, dict) or header.get("kind") != "header":
+            raise MergeError(f"{path}: first line is not an atlas header")
+        records: List[Tuple[tuple, dict]] = []
+        torn = 0
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+                point = tuple(int(x) for x in rec["point"])
+                # Field presence check mirrors what a resuming atlas
+                # needs; a torn line missing fields is dropped, not kept.
+                for field in ("is_anomaly", "times", "flops",
+                              "cheapest", "fastest"):
+                    rec[field]
+            except (json.JSONDecodeError, KeyError, TypeError, ValueError):
+                torn += 1
+                continue
+            records.append((point, rec))
+    return header, records, torn
+
+
+@dataclasses.dataclass
+class MergeReport:
+    out_path: Optional[Path]
+    header: dict
+    n_shards: int
+    n_records: int
+    n_duplicates: int              # dropped, first-writer kept
+    n_conflicts: int               # duplicates whose payloads differed
+    n_torn: int
+    duplicates: List[Tuple[tuple, str, str]]  # (point, kept-in, dropped-in)
+
+    def summary(self) -> str:
+        lines = [
+            f"merged {self.n_shards} shard(s): {self.n_records} instances"
+            + (f" -> {self.out_path}" if self.out_path else ""),
+            f"duplicates dropped (first writer wins): {self.n_duplicates}"
+            + (f" ({self.n_conflicts} with conflicting payloads)"
+               if self.n_conflicts else ""),
+        ]
+        if self.n_torn:
+            lines.append(f"torn tail lines tolerated: {self.n_torn}")
+        for point, kept, dropped in self.duplicates[:10]:
+            lines.append(f"  dup {point}: kept {kept}, dropped {dropped}")
+        if len(self.duplicates) > 10:
+            lines.append(f"  ... {len(self.duplicates) - 10} more")
+        return "\n".join(lines)
+
+
+def merge_shards(paths: List[Path],
+                 out_path: Optional[Path] = None) -> MergeReport:
+    """Merge shard files (in the given order) into one canonical atlas.
+
+    ``out_path=None`` validates and reports without writing (dry run).
+    """
+    if not paths:
+        raise MergeError("no shard files given")
+    canon: Optional[dict] = None
+    canon_src: Optional[Path] = None
+    merged: Dict[tuple, dict] = {}
+    kept_in: Dict[tuple, str] = {}
+    duplicates: List[Tuple[tuple, str, str]] = []
+    n_conflicts = 0
+    n_torn = 0
+    for path in paths:
+        path = Path(path)
+        header, records, torn = load_shard(path)
+        n_torn += torn
+        ident = _canonical(header)
+        if canon is None:
+            canon, canon_src = ident, path
+        elif ident != canon:
+            diff = sorted(k for k in set(canon) | set(ident)
+                          if canon.get(k) != ident.get(k))
+            raise MergeError(
+                f"{path} disagrees with {canon_src} on {diff} — refusing "
+                f"to merge measurements from different sweep "
+                f"configurations")
+        for point, rec in records:
+            if point in merged:
+                duplicates.append((point, kept_in[point], path.name))
+                if merged[point] != rec:
+                    n_conflicts += 1
+                continue
+            merged[point] = rec
+            kept_in[point] = path.name
+    if out_path is not None:
+        out_path = Path(out_path)
+        out_path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = out_path.with_suffix(out_path.suffix + ".tmp")
+        with tmp.open("w") as f:
+            f.write(json.dumps(canon, sort_keys=True) + "\n")
+            for point in sorted(merged):
+                f.write(json.dumps(merged[point], sort_keys=True) + "\n")
+        tmp.replace(out_path)
+    return MergeReport(
+        out_path=out_path,
+        header=canon,
+        n_shards=len(paths),
+        n_records=len(merged),
+        n_duplicates=len(duplicates),
+        n_conflicts=n_conflicts,
+        n_torn=n_torn,
+        duplicates=duplicates,
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python tools/atlas_merge.py",
+        description="Merge per-host atlas shard files into one canonical "
+                    "atlas (first-writer-wins dedup; mismatched "
+                    "fingerprint/spec/threshold headers are rejected).")
+    ap.add_argument("shards", nargs="+", type=Path,
+                    help="shard files in precedence order (first writer "
+                         "wins on duplicate points)")
+    ap.add_argument("--out", "-o", type=Path, default=None,
+                    help="canonical atlas to write (omit for a dry-run "
+                         "validation + report)")
+    args = ap.parse_args(argv)
+    try:
+        report = merge_shards(args.shards, args.out)
+    except (MergeError, OSError) as e:
+        print(f"atlas merge failed: {e}", file=sys.stderr)
+        return 1
+    print(report.summary())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
