@@ -1,0 +1,66 @@
+"""Static plan verifier benchmark: zoo-lint throughput + mutation gate.
+
+Rows (``name,us_per_call,derived`` convention):
+
+* ``analysis_verify_algorithm`` — µs to statically verify ONE algorithm
+  (all passes: shapes, storage, liveness, FLOP recount, result check).
+* ``analysis_verify_zoo`` — the full-zoo lint the ``analysis-smoke`` CI
+  job gates on: every algorithm of every registered family across the
+  smoke grid. Derived carries algorithms/s, instance and rule counts —
+  the number that says "verification is cheap enough to leave on".
+* ``analysis_mutation_suite`` — the 8-way mutation harness; derived
+  carries caught/total (CI requires 8/8).
+"""
+
+from __future__ import annotations
+
+from .common import emit, note, time_call
+
+
+def main() -> None:
+    from repro.core.analysis import (
+        mutation_catch_rate,
+        run_mutation_suite,
+        verify_algorithm,
+        verify_zoo,
+    )
+    from repro.core.expressions import get_spec
+
+    spec = get_spec("aatb")
+    point = (192, 128, 96)
+    algos = spec.algorithms(point)
+
+    def one_algorithm() -> None:
+        for a in algos:
+            if verify_algorithm(a):
+                raise AssertionError("zoo algorithm failed verification")
+
+    secs = time_call(one_algorithm, reps=5)
+    per_alg_us = secs / len(algos) * 1e6
+    emit("analysis_verify_algorithm", per_alg_us,
+         f"unit=us_per_algorithm;family=aatb;algorithms={len(algos)}")
+
+    lint = verify_zoo(grids=("smoke",))
+    if lint.findings:
+        raise AssertionError(
+            f"zoo lint found {len(lint.findings)} finding(s)")
+    rate = lint.algorithms / lint.seconds if lint.seconds else 0.0
+    emit("analysis_verify_zoo",
+         lint.seconds / max(lint.algorithms, 1) * 1e6,
+         f"unit=us_per_algorithm;algorithms_per_s={rate:.0f};"
+         f"algorithms={lint.algorithms};instances={lint.instances};"
+         f"rules={lint.rules_run}")
+    note(f"zoo lint: {lint.algorithms} algorithms / "
+         f"{lint.instances} instances in {lint.seconds:.2f}s "
+         f"({rate:.0f} alg/s, {lint.rules_run} rules)")
+
+    secs = time_call(lambda: run_mutation_suite(), reps=3)
+    outcomes = run_mutation_suite()
+    caught, total = mutation_catch_rate(outcomes)
+    emit("analysis_mutation_suite", secs * 1e6,
+         f"unit=us_per_suite;caught={caught};total={total}")
+    note(f"mutation suite: {caught}/{total} caught in {secs * 1e3:.1f}ms")
+
+
+if __name__ == "__main__":
+    main()

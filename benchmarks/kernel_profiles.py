@@ -7,7 +7,6 @@ discriminant bridges.
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import AnalyticalTPUProfile
 from repro.core.flops import gemm, symm, syrk

@@ -12,7 +12,6 @@ import numpy as np
 from repro.optim.muon import (
     _ns_iteration_gram,
     _ns_iteration_right,
-    ns_algorithm_calls,
     plan_ns_mode,
 )
 

@@ -13,6 +13,7 @@ import traceback
 
 def main() -> None:
     from . import (
+        analysis_bench,
         calibrate_bench,
         discriminant_bench,
         experiment1,
@@ -33,6 +34,7 @@ def main() -> None:
         ("calibration subsystem", calibrate_bench.main),
         ("sweep engine (serial vs sharded)", sweep_bench.main),
         ("expression zoo (enumeration + abundance)", zoo_bench.main),
+        ("static plan verifier (zoo lint + mutants)", analysis_bench.main),
         ("discriminant scoreboard (atlas replay)", discriminant_bench.main),
         ("experiment1 (paper §4.1.1/§4.2.1)", experiment1.main),
         ("experiment2 (paper §4.1.2/§4.2.2)", experiment2.main),

@@ -21,8 +21,7 @@ from __future__ import annotations
 import os
 import signal
 import threading
-import time
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Optional
 
 import jax
 

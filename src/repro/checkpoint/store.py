@@ -22,12 +22,10 @@ the multi-host writer needs.
 
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import re
 import shutil
-import tempfile
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax

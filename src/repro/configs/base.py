@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 from repro.models.transformer import ModelConfig
 

@@ -141,6 +141,16 @@ _LAZY_EXPORTS = {
     "evaluate_atlas": ".evaluate",
     "evaluate_discriminants": ".evaluate",
     "load_atlas_records": ".evaluate",
+    # static plan verifier (analysis imports algorithms/expressions; lazy
+    # keeps the analysis passes out of the base import path)
+    "AnalysisError": ".analysis",
+    "Finding": ".analysis",
+    "assert_algorithms_valid": ".analysis",
+    "run_mutation_suite": ".analysis",
+    "verify_algorithm": ".analysis",
+    "verify_algorithms": ".analysis",
+    "verify_family": ".analysis",
+    "verify_zoo": ".analysis",
     # deprecated alias (selector.__getattr__ emits the DeprecationWarning
     # at first *use*, not at package import — and it is deliberately NOT
     # in __all__, so star-imports don't trigger it either)
@@ -197,4 +207,7 @@ __all__ = [
     "register_discriminant", "registered_discriminants",
     "AtlasReplay", "DiscriminantScore", "EvaluationResult",
     "evaluate_atlas", "evaluate_discriminants", "load_atlas_records",
+    "AnalysisError", "Finding", "assert_algorithms_valid",
+    "run_mutation_suite", "verify_algorithm", "verify_algorithms",
+    "verify_family", "verify_zoo",
 ]

@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import os
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 from .expr import Chain, Transpose, bind_dims
@@ -269,10 +270,16 @@ def canonical_key(steps: Sequence[Step]) -> Tuple:
                  for s in steps)
 
 
+#: Env var turning on post-enumeration static verification everywhere a
+#: caller doesn't pass ``verify=`` explicitly (CI debug runs set this).
+VERIFY_ENUMERATION_ENV = "REPRO_VERIFY_ENUMERATION"
+
+
 def enumerate_algorithms(
     c: Chain,
     env: Optional[Dict[str, int]] = None,
     max_algorithms: int = 512,
+    verify: Optional[bool] = None,
 ) -> List[Algorithm]:
     """Enumerate all kernel-call sequences evaluating chain ``c``.
 
@@ -281,6 +288,13 @@ def enumerate_algorithms(
     ``max_algorithms``; Gram pairs are detected by structural fingerprint,
     so transpose-equal *intermediates* (``(AB)(AB)ᵀ``) enumerate their
     SYRK variant too, with dead transpose-twin steps pruned.
+
+    ``verify=True`` runs the static plan verifier
+    (:mod:`repro.core.analysis`) over the enumerated family and raises
+    :class:`~repro.core.analysis.AnalysisError` on any error finding —
+    a debug-mode self-check for enumeration changes. ``verify=None``
+    (the default) defers to the ``REPRO_VERIFY_ENUMERATION`` env var so
+    CI can switch the check on globally without touching call sites.
     """
     dims = bind_dims(c, env or {})
     leaves = _leaf_nodes(c, dims)
@@ -354,10 +368,19 @@ def enumerate_algorithms(
 
     rec(leaves, ())
     # Stable, human-auditable naming: ordinal + per-step kernel labels.
-    return [
+    named = [
         Algorithm(name=f"alg{i + 1}[{a.name}]", steps=a.steps)
         for i, a in enumerate(out)
     ]
+    if verify is None:
+        verify = bool(os.environ.get(VERIFY_ENUMERATION_ENV))
+    if verify:
+        # Lazy import: analysis depends on this module, not vice versa.
+        from .analysis import assert_algorithms_valid
+
+        assert_algorithms_valid(named, chain=c, env=env,
+                                context=f"enumerate_algorithms({c!r})")
+    return named
 
 
 def optimal_chain_order(dims: Sequence[int]) -> Tuple[int, Tuple]:

@@ -203,11 +203,13 @@ def calibrate(
 
 
 def main(argv: Optional[List[str]] = None) -> int:
-    from .cli_help import backends_epilog, discriminants_epilog
+    from .cli_help import (analysis_rules_epilog, backends_epilog,
+                           discriminants_epilog)
     ap = argparse.ArgumentParser(
         prog="python -m repro.core.calibrate",
         description="Calibrate this machine's kernel performance profile.",
-        epilog=backends_epilog() + "\n\n" + discriminants_epilog(),
+        epilog=backends_epilog() + "\n\n" + discriminants_epilog()
+               + "\n\n" + analysis_rules_epilog(),
         formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--backend", choices=registered_backends(),
                     default="blas",

@@ -35,6 +35,18 @@ def discriminants_epilog() -> str:
     return "\n".join(lines)
 
 
+def analysis_rules_epilog() -> str:
+    """One line per registered static-analysis rule, severity-flagged."""
+    from .analysis import RULES
+
+    lines = ["static analysis rules (repro.core.analysis; "
+             "python -m repro.core.analysis):"]
+    for rule_id in sorted(RULES):
+        rule = RULES[rule_id]
+        lines.append(f"  {rule_id:<18} [{rule.severity}] {rule.summary}")
+    return "\n".join(lines)
+
+
 def backends_epilog() -> str:
     """One line per registered execution backend + its fingerprint dtype."""
     from .backends import registered_backends

@@ -145,6 +145,18 @@ class ExpressionSpec:
     def algorithms(self, point: Sequence[int]) -> List[Algorithm]:
         return enumerate_algorithms(self.chain(point))
 
+    def verify(self, point: Sequence[int]):
+        """Statically verify this family at ``point``; returns findings.
+
+        Convenience front-end to
+        :func:`repro.core.analysis.verify_family` (lazy import: analysis
+        layers on top of this module). An empty list means every
+        enumerated algorithm passed every analysis rule.
+        """
+        from .analysis import verify_family
+
+        return verify_family(self, point)
+
     def grid(self, name: str) -> GridSpec:
         """Named grid for this family: per-spec override ∨ SWEEP_GRIDS."""
         values = self.grids.get(name) or SWEEP_GRIDS.get(name)

@@ -22,7 +22,7 @@ per-call dataclass so the perf-model layer can attach time estimates.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Iterable, Tuple
 
 #: The kernel vocabulary of the enumeration layer. Profiles, runners and
 #: the calibration sweep all branch over exactly these kinds.
@@ -108,5 +108,5 @@ def tri2full(m: int, *ops: str) -> KernelCall:
     return KernelCall("tri2full", (m,), tuple(ops))
 
 
-def total_flops(calls) -> int:
+def total_flops(calls: Iterable[KernelCall]) -> int:
     return sum(c.flops for c in calls)

@@ -894,7 +894,8 @@ def _registry_epilog() -> str:
     """All three registries, generated at parser-build time so the help
     text can never omit a registered entry (the hard-coded prose it
     replaced hid ``roofline``/``rankk`` and every user registration)."""
-    from .cli_help import backends_epilog, discriminants_epilog
+    from .cli_help import (analysis_rules_epilog, backends_epilog,
+                           discriminants_epilog)
 
     lines = ["registered expression families (repro.core.expressions):"]
     for cli_name in registered_names():
@@ -902,7 +903,7 @@ def _registry_epilog() -> str:
         lines.append(f"  {cli_name:<7} {s.name:<6} ndims={s.ndims}  "
                      f"{s.description}")
     return "\n".join(lines) + "\n\n" + discriminants_epilog() \
-        + "\n\n" + backends_epilog()
+        + "\n\n" + backends_epilog() + "\n\n" + analysis_rules_epilog()
 
 
 def main(argv: Optional[List[str]] = None) -> int:

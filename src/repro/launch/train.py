@@ -15,9 +15,8 @@ import argparse
 import sys
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs import SHAPES, get, get_smoke, normalize
+from repro.configs import get, get_smoke, normalize
 from repro.data.pipeline import SyntheticLM
 from repro.launch.mesh import make_host_mesh, set_mesh
 from repro.runtime.supervisor import RestartPolicy, Supervisor

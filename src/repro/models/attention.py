@@ -16,12 +16,12 @@ are pure functions.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from . import layers, scan_util
+from . import scan_util
 from .layers import Axes, Params, apply_rope, dense, dense_init, softcap
 
 

@@ -10,7 +10,7 @@ whisper layout.
 
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from repro.sharding.context import shard_seq
 
 from . import attention, layers, scan_util
-from .attention import AttnConfig, KVCache
+from .attention import KVCache
 from .layers import Axes, Params
 from .transformer import ModelConfig, _logits
 

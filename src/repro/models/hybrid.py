@@ -16,7 +16,7 @@ hidden state directly.
 
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro.sharding.context import shard_seq
 
 from . import attention, layers, scan_util, ssm as ssm_lib
-from .attention import AttnConfig, KVCache
+from .attention import KVCache
 from .layers import Axes, Params
 from .ssm import SSMCache
 from .transformer import ModelConfig, _logits

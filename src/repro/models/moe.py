@@ -21,14 +21,13 @@ scale); the router adds the usual load-balancing auxiliary loss.
 
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.sharding.context import shard_moe_groups
 
-from . import layers
 from .layers import Axes, Params, dense, dense_init
 
 

@@ -14,7 +14,7 @@ gemma2) rides through the scan as a per-layer array; heterogeneity that is
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

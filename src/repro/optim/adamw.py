@@ -9,7 +9,7 @@ ZeRO-style sharding rules (optimizer state sharded like params over the
 
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

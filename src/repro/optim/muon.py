@@ -26,7 +26,7 @@ The non-2D params (norms, embeddings by convention) fall through to AdamW.
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -40,6 +40,7 @@ import os
 import threading
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.core.analysis import assert_algorithms_valid
 from repro.core.backends import measure_seconds
 from repro.core.expressions import get_spec
 from repro.core.planner import Plan, Planner
@@ -260,10 +261,11 @@ class PlanService:
     def __init__(self, discriminant: str = "perfmodel",
                  backend: str = "numpy", dtype: str = "float32",
                  planner: Optional[Planner] = None, refine: bool = False,
-                 queue_maxlen: int = 1024):
+                 queue_maxlen: int = 1024, verify_plans: bool = True):
         self.planner = planner if planner is not None else Planner(
             discriminant=discriminant, backend=backend)
         self.dtype = dtype
+        self.verify_plans = verify_plans
         self.cache = PlanCache()
         self.queue = RefinementQueue(maxlen=queue_maxlen)
         self.refine = refine
@@ -283,12 +285,27 @@ class PlanService:
                 self.planner.profile_generation())
 
     def lookup(self, family: str, dims: Sequence[int]) -> Plan:
-        """Shape → plan. Lock-free on hit; coalesced planner call on miss."""
+        """Shape → plan. Lock-free on hit; coalesced planner call on miss.
+
+        With ``verify_plans`` (the default) the selected algorithm runs
+        through the static plan verifier *inside* the coalesced compute:
+        an invalid DAG raises :class:`repro.core.analysis.AnalysisError`
+        before publication, so the cache can never serve — or retain — a
+        plan that fails analysis (the :class:`PlanCache` failure path
+        propagates to coalesced waiters and uninstalls the in-flight
+        marker).
+        """
         key = self.key(family, dims)
 
         def compute() -> Plan:
             spec = get_spec(family)
-            return self.planner.plan(spec.chain(key[1]))
+            chain = spec.chain(key[1])
+            plan = self.planner.plan(chain)
+            if self.verify_plans:
+                assert_algorithms_valid(
+                    [plan.algorithm], chain=chain,
+                    context=f"serving plan {family}@{key[1]}")
+            return plan
 
         return self.cache.get(key, compute)
 

@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import contextlib
 import threading
-from typing import Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

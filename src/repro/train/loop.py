@@ -11,11 +11,10 @@ Integrates every fault-tolerance substrate:
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import Prefetcher

@@ -1,0 +1,295 @@
+"""Static plan verifier: zoo-clean properties, mutation catches, wiring.
+
+Four layers of assurance, mirroring how the analysis package is wired
+into the repo:
+
+1. **Soundness on valid input** — every algorithm of every registered
+   family, at randomized valid dims (hypothesis, or the deterministic
+   shim), verifies with ZERO findings. This is the acceptance bar the
+   ``analysis-smoke`` CI job enforces over the named grids.
+2. **Completeness on known-bad input** — each of the 8 mutation classes
+   is caught with its *expected* rule id, and the harness's outcomes
+   agree with running the mutators by hand.
+3. **Wiring** — the ``enumerate_algorithms`` debug hook, the
+   ``PlanService`` publish guard (an invalid plan must never enter the
+   cache), the ``ExpressionSpec.verify`` convenience, and the lazy
+   ``repro.core`` exports.
+4. **Pins** — the CLI epilogs and docs rule catalog list every
+   registered rule, so registry additions surface everywhere at once.
+"""
+
+import dataclasses
+import pathlib
+import subprocess
+import sys
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.algorithms import enumerate_algorithms
+from repro.core.analysis import (
+    MUTANT_CLASSES,
+    AnalysisError,
+    Finding,
+    RULES,
+    errors_only,
+    format_findings,
+    mutant_names,
+    register_rule,
+    registered_rules,
+    run_mutation_suite,
+    verify_algorithm,
+    verify_algorithms,
+    verify_family,
+    verify_zoo,
+)
+from repro.core.analysis.flopcheck import recount_call
+from repro.core.expressions import get_spec, registered_names
+from repro.core.flops import KernelCall, gemm, symm, syrk, tri2full
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+# ------------------------------------------------ soundness on valid input --
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    family=st.sampled_from(sorted(registered_names())),
+    d0=st.integers(min_value=2, max_value=96),
+    d1=st.integers(min_value=2, max_value=96),
+    d2=st.integers(min_value=2, max_value=96),
+    d3=st.integers(min_value=2, max_value=96),
+    d4=st.integers(min_value=2, max_value=96),
+    d5=st.integers(min_value=2, max_value=96),
+)
+def test_every_family_verifies_clean_at_random_dims(family, d0, d1, d2,
+                                                    d3, d4, d5):
+    spec = get_spec(family)
+    point = (d0, d1, d2, d3, d4, d5)[: spec.ndims]
+    findings = verify_family(spec, point)
+    assert findings == [], format_findings(findings)
+
+
+def test_zoo_smoke_grid_is_clean():
+    lint = verify_zoo(grids=("smoke",))
+    assert lint.findings == [], format_findings(lint.findings)
+    assert lint.algorithms > 0 and lint.instances > 0
+    assert lint.rules_run == len(RULES)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=512),
+    n=st.integers(min_value=1, max_value=512),
+    k=st.integers(min_value=1, max_value=512),
+)
+def test_recount_agrees_with_kernel_flops(m, n, k):
+    """The independent derivations coincide with flops.py on every kind."""
+    for call in (gemm(m, n, k), syrk(m, k), symm(m, n), tri2full(m)):
+        assert recount_call(call) == call.flops
+
+
+# ------------------------------------------- completeness on known-bad DAGs --
+
+
+def test_mutation_suite_catches_all_classes():
+    outcomes = run_mutation_suite()
+    missed = [o for o in outcomes if not o.caught]
+    assert not missed, f"uncaught mutants: {missed}"
+    assert len(outcomes) == 8
+
+
+@pytest.mark.parametrize("mutant", MUTANT_CLASSES, ids=mutant_names())
+def test_each_mutant_flagged_with_expected_rule(mutant):
+    spec = get_spec("aatb")
+    point = (96, 64, 48)
+    algos = spec.algorithms(point)
+    chain = spec.chain(point)
+    assert verify_algorithms(algos, chain=chain) == []
+    mutated = mutant.apply(algos)
+    fired = {f.rule_id for f in verify_algorithms(mutated, chain=chain)}
+    assert mutant.expected_rule in fired, (
+        f"{mutant.name}: expected {mutant.expected_rule}, fired {fired}")
+
+
+def test_mutant_expected_rules_are_registered():
+    for mutant in MUTANT_CLASSES:
+        assert mutant.expected_rule in RULES
+
+
+def test_redundant_tri2full_is_warning_not_error():
+    """A wasteful (but correct) mirror is a warning, not an error."""
+    from repro.core.algorithms import Algorithm, Leaf, Step
+
+    leaf = Leaf(index=0, base=0, transposed=False, rows=8, cols=8,
+                symmetric=True, storage="full")
+    algo = Algorithm(
+        name="wasteful-mirror",
+        steps=(Step(call=tri2full(8), lhs=leaf, rhs=None, out=0,
+                    out_rows=8, out_cols=8, out_storage="full",
+                    out_symmetric=True),))
+    findings = verify_algorithm(algo)
+    assert [f.rule_id for f in findings] == ["redundant-tri2full"]
+    assert findings[0].severity == "warning"
+    assert errors_only(findings) == []
+
+
+# ----------------------------------------------------------------- wiring --
+
+
+def test_enumerate_verify_hook_explicit_and_env(monkeypatch):
+    spec = get_spec("atab")
+    c = spec.chain((24, 36, 12))
+    ok = enumerate_algorithms(c, verify=True)
+    assert ok
+    monkeypatch.setenv("REPRO_VERIFY_ENUMERATION", "1")
+    assert [a.name for a in enumerate_algorithms(c)] == [a.name for a in ok]
+
+
+def test_expression_spec_verify_convenience():
+    assert get_spec("abtb").verify((16, 24, 8)) == []
+
+
+def test_plan_service_guard_blocks_invalid_plan():
+    """An invalid plan raises pre-publication and never enters the cache."""
+    from repro.core.planner import Planner
+    from repro.serve.plan_cache import PlanService
+
+    class _CorruptingPlanner:
+        def __init__(self):
+            self.inner = Planner(discriminant="flops", backend="numpy")
+
+        def __getattr__(self, name):
+            return getattr(self.inner, name)
+
+        def plan(self, chain, env=None):
+            good = self.inner.plan(chain, env)
+            steps = list(good.algorithm.steps)
+            steps[-1] = dataclasses.replace(
+                steps[-1], out_rows=steps[-1].out_rows + 1)
+            return dataclasses.replace(
+                good, algorithm=dataclasses.replace(
+                    good.algorithm, steps=tuple(steps)))
+
+    svc = PlanService(planner=_CorruptingPlanner())
+    with pytest.raises(AnalysisError) as exc:
+        svc.lookup("atab", (16, 24, 8))
+    assert any(f.rule_id == "bad-result" for f in exc.value.findings)
+    assert svc.cache.stats()["size"] == 0
+    # The in-flight marker was uninstalled: the shape is retryable.
+    with pytest.raises(AnalysisError):
+        svc.lookup("atab", (16, 24, 8))
+
+
+def test_plan_service_verify_on_by_default_and_optional():
+    from repro.serve.plan_cache import PlanService
+    assert PlanService().verify_plans is True
+    svc = PlanService(discriminant="flops", verify_plans=True)
+    plan = svc.lookup("aatb", (16, 24, 8))
+    assert plan is svc.lookup("aatb", (16, 24, 8))  # published + cached
+
+
+def test_core_lazy_exports():
+    import repro.core as core
+    assert core.verify_algorithm is verify_algorithm
+    assert core.AnalysisError is AnalysisError
+    assert core.Finding is Finding
+
+
+# ---------------------------------------------------------- rule registry --
+
+
+def test_rule_registry_rejects_duplicates_and_bad_severity():
+    with pytest.raises(ValueError):
+        register_rule("raw-tri-read", "error", "dup")
+    with pytest.raises(ValueError):
+        register_rule("brand-new-rule-bad-sev", "fatal", "nope")
+
+
+def test_collector_rejects_unregistered_rule():
+    from repro.core.analysis import Collector
+    with pytest.raises(KeyError):
+        Collector(algorithm="x").emit("no-such-rule", "msg")
+
+
+def test_analysis_error_carries_findings():
+    from repro.core.analysis import assert_algorithms_valid
+    spec = get_spec("aatb")
+    algos = spec.algorithms((16, 24, 8))
+    bad = [dataclasses.replace(a, steps=()) for a in algos[:1]]
+    with pytest.raises(AnalysisError) as exc:
+        assert_algorithms_valid(bad)
+    assert exc.value.findings
+    assert all(f.severity == "error" for f in exc.value.findings)
+
+
+def test_off_by_one_flops_subclass_detected():
+    """A KernelCall subclass lying through .flops trips flop-mismatch."""
+
+    class _Lying(KernelCall):
+        @property
+        def flops(self):
+            return super().flops + 1
+
+    spec = get_spec("abcd")
+    algo = spec.algorithms((8, 9, 10, 11, 12))[0]
+    step = algo.steps[0]
+    lying = _Lying(kind=step.call.kind, dims=step.call.dims,
+                   operands=step.call.operands)
+    bad = dataclasses.replace(
+        algo, steps=(dataclasses.replace(step, call=lying),)
+        + algo.steps[1:])
+    fired = {f.rule_id for f in verify_algorithm(bad)}
+    assert "flop-mismatch" in fired
+
+
+# -------------------------------------------------------------- CLI + pins --
+
+
+def test_cli_main_zoo_and_mutants(capsys):
+    from repro.core.analysis.__main__ import main
+    assert main(["--expr", "aatb,abtb", "--grid", "smoke"]) == 0
+    out = capsys.readouterr().out
+    assert "0 finding(s)" in out
+    assert main(["--mutants"]) == 0
+    out = capsys.readouterr().out
+    assert "8/8 caught" in out
+
+
+def test_cli_module_exit_status_zero_on_clean_zoo():
+    import os
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.core.analysis",
+         "--expr", "btsb", "--grid", "smoke"],
+        cwd=REPO, capture_output=True, text=True, env=env)
+    assert proc.returncode == 0, proc.stderr
+
+
+def test_analysis_epilog_lists_every_rule():
+    from repro.core.cli_help import analysis_rules_epilog
+    text = analysis_rules_epilog()
+    for rule_id in registered_rules():
+        assert rule_id in text
+
+
+def test_sweep_and_analysis_cli_epilogs_include_rules():
+    from repro.core.analysis.__main__ import build_parser
+    from repro.core.sweep import _registry_epilog
+    assert "static analysis rules" in _registry_epilog()
+    epilog = build_parser().epilog
+    for rule_id in registered_rules():
+        assert rule_id in epilog
+
+
+def test_docs_rule_catalog_covers_registry():
+    """docs/analysis.md documents every registered rule (and no ghosts)."""
+    text = (REPO / "docs" / "analysis.md").read_text()
+    for rule_id in registered_rules():
+        assert f"`{rule_id}`" in text, f"rule {rule_id} missing from docs"
+    for mutant in mutant_names():
+        assert mutant in text, f"mutant {mutant} missing from docs"

@@ -5,7 +5,6 @@ import pytest
 
 from repro.core import (
     GRAM_AATB,
-    MATRIX_CHAIN_ABCD,
     AnalyticalTPUProfile,
     BlasRunner,
     TableProfile,

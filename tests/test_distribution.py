@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.launch.hlo import CollectiveStats, Roofline, collective_stats
+from repro.launch.hlo import Roofline, collective_stats
 from repro.sharding.rules import batch_spec, params_specs, spec_for
 
 
@@ -163,7 +163,6 @@ def test_roofline_terms_and_bottleneck():
 def test_sharded_train_step_runs_on_host_mesh():
     from repro.configs import get_smoke
     from repro.data.pipeline import SyntheticLM
-    from repro.launch import specs as specs_lib
     from repro.launch.mesh import make_host_mesh, set_mesh
     from repro.sharding.context import activation_sharding
     from repro.train.train_step import make_train_state, make_train_step

@@ -16,8 +16,8 @@ def _load_checker():
 
 
 def test_docs_pages_exist():
-    for page in ("architecture.md", "calibration.md", "discriminants.md",
-                 "serving.md", "sweeping.md"):
+    for page in ("analysis.md", "architecture.md", "calibration.md",
+                 "discriminants.md", "serving.md", "sweeping.md"):
         path = REPO / "docs" / page
         assert path.is_file(), page
         assert path.read_text().strip().startswith("#"), page
@@ -25,9 +25,9 @@ def test_docs_pages_exist():
 
 def test_readme_links_into_docs():
     text = (REPO / "README.md").read_text()
-    for page in ("docs/architecture.md", "docs/calibration.md",
-                 "docs/discriminants.md", "docs/serving.md",
-                 "docs/sweeping.md"):
+    for page in ("docs/analysis.md", "docs/architecture.md",
+                 "docs/calibration.md", "docs/discriminants.md",
+                 "docs/serving.md", "docs/sweeping.md"):
         assert page in text, page
     assert "repro.core.sweep" in text  # quickstart runs the sweep engine
     assert "tools/loadtest.py" in text  # serving quickstart
@@ -62,6 +62,27 @@ def test_serving_guide_covers_the_contracts():
         "REPRO_SERVE_PLANNER",      # kill-switch
         "plan_cache",               # the module the guide narrates
         "tools/loadtest.py",        # quickstart command
+    ):
+        assert needle in text, needle
+
+
+def test_analysis_guide_covers_the_contracts():
+    """docs/analysis.md documents what the verifier actually enforces.
+
+    (Rule-catalog completeness — every registered rule id and mutant
+    name appears — is pinned in tests/test_analysis.py, next to the
+    registries it reads.)
+    """
+    text = (REPO / "docs" / "analysis.md").read_text()
+    for needle in (
+        "repro.core.analysis",      # the CLI entry point
+        "--mutants",                # the mutation gate
+        "8/8 caught",               # what CI greps for
+        "REPRO_VERIFY_ENUMERATION", # the enumeration hook env var
+        "verify_plans",             # the serving publish guard
+        "register_kernel_shape",    # extending to a new kernel kind
+        "register_rule",            # extending with a custom rule
+        "AnalysisError",            # the raising contract
     ):
         assert needle in text, needle
 

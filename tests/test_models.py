@@ -9,7 +9,6 @@ from hypothesis import given, settings, strategies as st
 
 from repro.configs import ARCH_IDS, get, get_smoke
 from repro.models import api
-from repro.models.transformer import ModelConfig
 
 KEY = jax.random.PRNGKey(0)
 

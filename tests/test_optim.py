@@ -4,7 +4,6 @@ selection, gradient compression error-feedback."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.optim import adamw, grad_compress, muon, schedule
 

@@ -4,7 +4,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import PartitionSpec as P
 
 from repro.sharding import context as ctx
 from repro.sharding.rules import pick_param_policy, rules_for

@@ -7,8 +7,6 @@ import sys
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
