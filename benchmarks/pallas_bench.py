@@ -1,0 +1,117 @@
+"""Pallas autotuning benchmark: default-tile vs tuned vs fused.
+
+The perf trajectory of ISSUE-9: for each benchmark shape, measure the
+Pallas backend at (a) the hard-coded 128-edge default tiles, (b) the
+config a fresh autotune pass picks for that shape, and (c) — for the
+two fusable patterns — the fused launch vs the unfused two-kernel walk.
+Rows report µs/call and achieved GFLOP/s.
+
+The tuning-smoke CI gate reads the ``pallas_tuned_worst_ratio`` row:
+tuned-or-fused must be ≥ default-tile on every row, within an
+interpret-mode tolerance on CPU (interpret mode executes the kernel body
+in Python, so tile-shape effects are noise there; on a real TPU the
+ratio is the headline).
+
+On this CPU container everything runs in interpret mode and stays tiny;
+REPRO_BENCH_SCALE=full widens the shapes.
+"""
+
+from __future__ import annotations
+
+import os
+
+from .common import FULL, emit, note
+
+
+def _gflops(flops: int, seconds: float) -> float:
+    return flops / max(seconds, 1e-12) / 1e9
+
+
+def main() -> None:
+    from repro.core.backends import get_backend
+    from repro.core.backends.base import synthetic_fused_algorithm
+    from repro.core.flops import KernelCall
+    from repro.core.tuning import padded_flops
+    from repro.kernels.autotune import autotune_request
+
+    backend = get_backend("pallas", reps=3 if FULL else 2, tuning=None)
+    reps = 3 if FULL else 2
+
+    base_shapes = [
+        ("gemm", (256, 256, 256)),
+        ("gemm", (384, 128, 256)),
+        ("syrk", (256, 256)),
+        ("symm", (256, 128)),
+    ] if not FULL else [
+        ("gemm", (1024, 1024, 1024)),
+        ("gemm", (2048, 256, 1024)),
+        ("syrk", (1024, 1024)),
+        ("symm", (1024, 512)),
+    ]
+    fused_shapes = [
+        ("chain_gemm", (256, 128, 128, 256)),
+        ("gemm_syrk", (256, 128, 128)),
+    ] if not FULL else [
+        ("chain_gemm", (1024, 512, 512, 1024)),
+        ("gemm_syrk", (1024, 512, 512)),
+    ]
+
+    note("\n== pallas autotuning (default tile vs tuned vs fused) ==")
+    note(f"{'shape':>30} {'default':>12} {'best':>12} {'ratio':>7}  config")
+    worst_ratio = float("inf")
+
+    # (a)/(b): default vs tuned, measured by the autotuner itself — the
+    # default config is always force-timed next to the survivors, so one
+    # request yields both sides on shared operands.
+    for kind, dims in base_shapes:
+        entry = autotune_request(backend, kind, dims, reps=reps, budget=4)
+        flops = KernelCall(kind, dims).flops
+        ratio = entry.default_seconds / max(entry.seconds, 1e-12)
+        worst_ratio = min(worst_ratio, ratio)
+        label = f"pallas_{kind}_{'x'.join(map(str, dims))}"
+        emit(f"{label}_default", entry.default_seconds * 1e6,
+             f"gflops={_gflops(flops, entry.default_seconds):.2f}")
+        emit(f"{label}_tuned", entry.seconds * 1e6,
+             f"gflops={_gflops(flops, entry.seconds):.2f};"
+             f"config={'/'.join(f'{k}={v}' for k, v in sorted(entry.config.items()))}")
+        note(f"{kind + str(dims):>30} {entry.default_seconds * 1e6:>10.1f}us "
+             f"{entry.seconds * 1e6:>10.1f}us {ratio:>6.2f}x  {entry.config}")
+
+    # (c): fused launch vs the unfused two-kernel walk of the same DAG.
+    for kind, dims in fused_shapes:
+        alg = synthetic_fused_algorithm(kind, dims)
+        operands = backend.make_operands(alg)
+        os.environ["REPRO_NO_FUSION"] = "1"
+        try:
+            unfused_s = backend.time_algorithm(alg, operands, reps=reps)
+        finally:
+            del os.environ["REPRO_NO_FUSION"]
+        fused_s = backend.time_algorithm(alg, operands, reps=reps)
+        flops = padded_flops(kind, dims, {})
+        ratio = unfused_s / max(fused_s, 1e-12)
+        worst_ratio = min(worst_ratio, ratio)
+        label = f"pallas_{kind}_{'x'.join(map(str, dims))}"
+        emit(f"{label}_unfused", unfused_s * 1e6,
+             f"gflops={_gflops(flops, unfused_s):.2f}")
+        emit(f"{label}_fused", fused_s * 1e6,
+             f"gflops={_gflops(flops, fused_s):.2f}")
+        note(f"{kind + str(dims):>30} {unfused_s * 1e6:>10.1f}us "
+             f"{fused_s * 1e6:>10.1f}us {ratio:>6.2f}x  (fused vs unfused)")
+
+    # The CI gate row: min over rows of (default-or-unfused / tuned-or-
+    # fused). ≥ 1.0 means the tuned/fused path never lost; interpret mode
+    # on CPU tolerates a slack factor (tile effects are noise there).
+    interpret = True
+    try:
+        import jax
+        interpret = jax.default_backend() != "tpu"
+    except Exception:
+        pass
+    emit("pallas_tuned_worst_ratio", float(worst_ratio),
+         f"interpret={int(interpret)}")
+    note(f"worst tuned-or-fused vs default ratio: {worst_ratio:.3f} "
+         f"(interpret={interpret})")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,7 @@ def main() -> None:
         experiment3,
         kernel_profiles,
         muon_bench,
+        pallas_bench,
         planner_bench,
         roofline,
         serve_bench,
@@ -32,6 +33,7 @@ def main() -> None:
     sections = [
         ("kernel_profiles (paper Fig 1)", kernel_profiles.main),
         ("calibration subsystem", calibrate_bench.main),
+        ("pallas autotuning (tile search + fusion)", pallas_bench.main),
         ("sweep engine (serial vs sharded)", sweep_bench.main),
         ("expression zoo (enumeration + abundance)", zoo_bench.main),
         ("static plan verifier (zoo lint + mutants)", analysis_bench.main),

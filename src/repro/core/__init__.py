@@ -100,8 +100,19 @@ from .selector import as_hybrid, select, select_expression
 _LAZY_EXPORTS = {
     "GRIDS": ".calibrate",
     "CalibrationResult": ".calibrate",
+    "TuneResult": ".calibrate",
     "expression_calls": ".calibrate",
     "sweep_kernels": ".calibrate",
+    # autotuning (tuning.py lazily imports kernel VMEM estimators; lazy
+    # here keeps the perfmodel/profile_store chain out of base import)
+    "TunedEntry": ".tuning",
+    "TuningTable": ".tuning",
+    "candidate_configs": ".tuning",
+    "load_default_tuning_table": ".tuning",
+    "load_tuning_table": ".tuning",
+    "prune_candidates": ".tuning",
+    "save_tuning_table": ".tuning",
+    "tuning_path": ".tuning",
     # sweep engine (the `sweep` *function* stays module-scoped to keep the
     # submodule name unambiguous, mirroring calibrate)
     "SWEEP_GRIDS": ".expressions",
@@ -197,7 +208,10 @@ __all__ = [
     "predict_algorithm_time",
     "Plan", "Planner", "default_planner", "plan", "reset_default_planner",
     "resolve_profile",
-    "GRIDS", "CalibrationResult", "sweep_kernels",
+    "GRIDS", "CalibrationResult", "TuneResult", "sweep_kernels",
+    "TunedEntry", "TuningTable", "candidate_configs",
+    "load_default_tuning_table", "load_tuning_table", "prune_candidates",
+    "save_tuning_table", "tuning_path",
     "FingerprintMismatchError", "HardwareFingerprint", "ProfileStoreError",
     "current_fingerprint", "load_default_profile", "load_profile",
     "profile_path", "save_profile",

@@ -75,6 +75,67 @@ class KernelOps:
     def tri2full(self, t):
         raise NotImplementedError
 
+    # -- fused adjacent-step dispatch (optional) ---------------------------
+    def fused_kinds(self) -> frozenset:
+        """Fused step patterns this vocabulary implements.
+
+        The walker consults this before dispatching: when two adjacent
+        steps match an advertised pattern (see :func:`fusable_pattern`),
+        it calls the fused method instead of the two single-kind ones.
+        Default: no fusion — CPU backends and plain jnp (where XLA does
+        its own fusion) keep the one-step-one-kernel mapping.
+        """
+        return frozenset()
+
+    def chain_gemm(self, a, b, c):
+        """Fused ``(a·b)·c`` (pattern ``"gemm+gemm"``)."""
+        raise NotImplementedError
+
+    def gemm_syrk(self, a, b):
+        """Fused lower triangle of ``(a·b)(a·b)ᵀ`` (``"gemm+syrk"``)."""
+        raise NotImplementedError
+
+
+def _fetched_refs(step: Step) -> tuple:
+    """The operand refs ``walk_steps`` actually fetches for ``step``.
+
+    syrk/tri2full fetch only ``lhs``; a syrk step's ``rhs`` may carry a
+    provenance twin (the transposed factor the builder pruned) that is
+    never materialized — counting it as a use would veto valid fusions.
+    """
+    if step.call.kind in ("gemm", "symm"):
+        return (step.lhs, step.rhs)
+    return (step.lhs,)
+
+
+def fusable_pattern(first: Step, second: Step,
+                    rest: Sequence[Step]) -> Optional[str]:
+    """Which advertised fused pattern ``(first, second)`` matches, if any.
+
+    ``first`` must be a gemm whose output ``X`` is consumed *only* as
+    ``second``'s left operand and never fetched by any later step (its
+    HBM materialization is what the fusion deletes):
+
+    * ``"gemm+gemm"`` — ``second`` is a gemm with ``lhs == X``
+      (``(A·B)·C``, the :mod:`repro.kernels.chain_gemm` shape);
+    * ``"gemm+syrk"`` — ``second`` is a syrk on ``X``
+      (``tril((A·B)(A·B)ᵀ)``, the epilogue fusion).
+    """
+    if first.call.kind != "gemm":
+        return None
+    x = first.out
+    for later in rest:
+        for ref in _fetched_refs(later):
+            if not isinstance(ref, Leaf) and ref == x:
+                return None
+    second_lhs_is_x = not isinstance(second.lhs, Leaf) and second.lhs == x
+    if second.call.kind == "gemm" and second_lhs_is_x and (
+            isinstance(second.rhs, Leaf) or second.rhs != x):
+        return "gemm+gemm"
+    if second.call.kind == "syrk" and second_lhs_is_x:
+        return "gemm+syrk"
+    return None
+
 
 def walk_steps(steps: Sequence[Step], leaf_fetch: Callable[[int], object],
                ops: KernelOps):
@@ -86,6 +147,12 @@ def walk_steps(steps: Sequence[Step], leaf_fetch: Callable[[int], object],
     and under tracing (jit/vmap of jnp/Pallas ops) alike — this is the
     single step walker the ISSUE-4 refactor collapsed the four previous
     executors into.
+
+    When ``ops.fused_kinds()`` advertises fused patterns, adjacent steps
+    matching :func:`fusable_pattern` dispatch to the fused method
+    (``ops.chain_gemm`` / ``ops.gemm_syrk``) as one launch; the fused
+    intermediate is provably dead (the pattern check rejects any later
+    use), so only the second step's output id is bound.
     """
     inter: Dict[int, object] = {}
 
@@ -95,8 +162,24 @@ def walk_steps(steps: Sequence[Step], leaf_fetch: Callable[[int], object],
             return ops.transpose(a) if ref.transposed else a
         return inter[ref]
 
+    fused = ops.fused_kinds()
     out = None
-    for step in steps:
+    i = 0
+    n = len(steps)
+    while i < n:
+        step = steps[i]
+        if fused and i + 1 < n:
+            pattern = fusable_pattern(step, steps[i + 1], steps[i + 2:])
+            if pattern is not None and pattern in fused:
+                nxt = steps[i + 1]
+                if pattern == "gemm+gemm":
+                    out = ops.chain_gemm(fetch(step.lhs), fetch(step.rhs),
+                                         fetch(nxt.rhs))
+                else:
+                    out = ops.gemm_syrk(fetch(step.lhs), fetch(step.rhs))
+                inter[nxt.out] = out
+                i += 2
+                continue
         kind = step.call.kind
         if kind == "gemm":
             out = ops.gemm(fetch(step.lhs), fetch(step.rhs))
@@ -112,6 +195,7 @@ def walk_steps(steps: Sequence[Step], leaf_fetch: Callable[[int], object],
         else:
             raise ValueError(kind)
         inter[step.out] = out
+        i += 1
     return out
 
 
@@ -165,6 +249,48 @@ def synthetic_algorithm(call: KernelCall) -> Algorithm:
     else:
         raise ValueError(call.kind)
     return Algorithm(name=f"bench_{call.kind}", steps=(step,))
+
+
+def synthetic_fused_algorithm(kind: str, dims: Sequence[int]) -> Algorithm:
+    """A two-step algorithm exercising exactly one fused pattern.
+
+    The fused analogue of :func:`synthetic_algorithm`: the step pair is
+    built so :func:`fusable_pattern` matches, and a fusion-advertising
+    backend times the fused launch while any other backend times the
+    two-kernel form — the same Algorithm measures both sides of the
+    fusion trade.
+
+    * ``"chain_gemm"``, dims ``(m, k, l, n)`` — ``(A·B)·C`` with
+      A ``(m,k)``, B ``(k,l)``, C ``(l,n)``;
+    * ``"gemm_syrk"``, dims ``(m, k, l)`` — ``tril((A·B)(A·B)ᵀ)`` with
+      A ``(m,k)``, B ``(k,l)``.
+    """
+    if kind == "chain_gemm":
+        m, k, l, n = dims
+        a = Leaf(index=0, base=0, transposed=False, rows=m, cols=k)
+        b = Leaf(index=1, base=1, transposed=False, rows=k, cols=l)
+        c = Leaf(index=2, base=2, transposed=False, rows=l, cols=n)
+        s1 = Step(call=KernelCall("gemm", (m, l, k)), lhs=a, rhs=b, out=0,
+                  out_rows=m, out_cols=l, out_storage="full",
+                  out_symmetric=False)
+        s2 = Step(call=KernelCall("gemm", (m, n, l)), lhs=0, rhs=c, out=1,
+                  out_rows=m, out_cols=n, out_storage="full",
+                  out_symmetric=False)
+    elif kind == "gemm_syrk":
+        m, k, l = dims
+        a = Leaf(index=0, base=0, transposed=False, rows=m, cols=k)
+        b = Leaf(index=1, base=1, transposed=False, rows=k, cols=l)
+        s1 = Step(call=KernelCall("gemm", (m, l, k)), lhs=a, rhs=b, out=0,
+                  out_rows=m, out_cols=l, out_storage="full",
+                  out_symmetric=False)
+        s2 = Step(call=KernelCall("syrk", (m, l)), lhs=0, rhs=None, out=1,
+                  out_rows=m, out_cols=m, out_storage="tri",
+                  out_symmetric=True)
+    else:
+        raise ValueError(
+            f"unknown fused pattern {kind!r}; expected 'chain_gemm' or "
+            f"'gemm_syrk'")
+    return Algorithm(name=f"bench_{kind}", steps=(s1, s2))
 
 
 class ExecutionBackend:

@@ -15,7 +15,9 @@ operand sets, one device dispatch instead of ``batch`` of them.
 
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional
+import contextlib
+import os
+from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
@@ -62,24 +64,73 @@ class PallasOps(JnpOps):
     ``tri2full`` stays jnp on purpose: it is pure data movement and XLA's
     fused tril/transpose is already bandwidth-bound (see
     :func:`repro.kernels.ops.tri2full`).
+
+    ``config_lookup(kind, dims) -> dict | None`` supplies tuned tile
+    configs (from a :class:`~repro.core.tuning.TuningTable`, or the
+    autotuner's per-candidate override); ``None``/missing keys fall back
+    to the kernels' built-in 128-edge defaults. Dims are read from the
+    operands' trailing axes, so the lookup sees per-example shapes under
+    vmap/jit tracing too. Unknown keys from a foreign table are dropped
+    via :data:`~repro.core.tuning.ALLOWED_KEYS` rather than crashing the
+    kernel call.
+
+    This vocabulary also advertises the two fused patterns
+    (``gemm+gemm`` → :func:`repro.kernels.ops.chain_gemm`,
+    ``gemm+syrk`` → :func:`repro.kernels.ops.gemm_syrk`) unless
+    ``REPRO_NO_FUSION`` is set.
     """
+
+    def __init__(self, config_lookup: Optional[
+            Callable[[str, Tuple[int, ...]], Optional[dict]]] = None):
+        self._lookup = config_lookup
+
+    def _cfg(self, kind: str, dims: Tuple[int, ...]) -> dict:
+        if self._lookup is None:
+            return {}
+        cfg = self._lookup(kind, dims)
+        if not cfg:
+            return {}
+        from ..tuning import ALLOWED_KEYS
+        allowed = ALLOWED_KEYS.get(kind, ())
+        return {k: int(v) for k, v in cfg.items() if k in allowed}
+
+    def fused_kinds(self) -> frozenset:
+        if os.environ.get("REPRO_NO_FUSION"):
+            return frozenset()
+        return frozenset({"gemm+gemm", "gemm+syrk"})
 
     def gemm(self, a, b):
         from repro.kernels import ops as kops
-        return kops.gemm(a, b)
+        cfg = self._cfg("gemm", (a.shape[-2], b.shape[-1], a.shape[-1]))
+        return kops.gemm(a, b, **cfg)
 
     def syrk(self, a):
         from repro.kernels import ops as kops
-        return kops.syrk(a)
+        cfg = self._cfg("syrk", (a.shape[-2], a.shape[-1]))
+        return kops.syrk(a, **cfg)
 
     def symm(self, s, b):
         from repro.kernels import ops as kops
-        return kops.symm(s, b)
+        cfg = self._cfg("symm", (s.shape[-2], b.shape[-1]))
+        return kops.symm(s, b, **cfg)
 
     def symm_r(self, b, s):
         from repro.kernels import ops as kops
         # B·S with S symmetric: (S·Bᵀ)ᵀ via the side-L kernel.
-        return _swap(kops.symm(s, _swap(b)))
+        cfg = self._cfg("symm", (s.shape[-2], b.shape[-2]))
+        return _swap(kops.symm(s, _swap(b), **cfg))
+
+    def chain_gemm(self, a, b, c):
+        from repro.kernels import ops as kops
+        cfg = self._cfg("chain_gemm", (a.shape[-2], a.shape[-1],
+                                       b.shape[-1], c.shape[-1]))
+        return kops.chain_gemm(a, b, c, **cfg)
+
+    def gemm_syrk(self, a, b):
+        from repro.kernels import ops as kops
+        cfg = self._cfg("gemm_syrk", (a.shape[-2], a.shape[-1],
+                                      b.shape[-1]))
+        return kops.gemm_syrk(a, b, **cfg)
 
 
 _JNP_OPS = JnpOps()
@@ -213,13 +264,72 @@ class PallasBackend(JaxBackend):
 
     Interpret mode on CPU, Mosaic on TPU — same call sites either way
     (see :mod:`repro.kernels.ops`).
+
+    Tuning: with ``tuning="auto"`` (the default) the backend lazily loads
+    the :class:`~repro.core.tuning.TuningTable` cached for this machine's
+    hardware fingerprint (written by ``calibrate --tune``) on first
+    kernel dispatch; every gemm/syrk/symm/fused call then runs at the
+    tuned tile config for its shape (nearest same-kind entry for unseen
+    shapes). Pass an explicit table, or ``tuning=None`` to pin the
+    built-in 128-edge defaults; ``REPRO_NO_TUNING=1`` kills lookup at
+    dispatch time regardless.
     """
 
     name = "pallas"
+    supports_tuning = True
 
     def __init__(self, device=None, reps: int = 3,
                  dtype: Optional[str] = None,
                  rng: Optional[np.random.Generator] = None,
-                 use_pallas: bool = True):
+                 use_pallas: bool = True, tuning="auto"):
         super().__init__(device=device, reps=reps, dtype=dtype, rng=rng,
                          use_pallas=use_pallas)
+        self._tuning = tuning          # "auto" | TuningTable | None
+        self._tuning_resolved = tuning != "auto"
+        self._override: Optional[Callable[
+            [str, Tuple[int, ...]], Optional[dict]]] = None
+
+    def set_tuning(self, table) -> None:
+        """Pin a :class:`~repro.core.tuning.TuningTable` (or ``None``)."""
+        self._tuning = table
+        self._tuning_resolved = True
+
+    def tuning_table(self):
+        """The resolved table (auto-load happens here), or ``None``."""
+        if not self._tuning_resolved:
+            from ..tuning import load_default_tuning_table
+            self._tuning = load_default_tuning_table(
+                backend=self.name, dtype=self.dtype)
+            self._tuning_resolved = True
+        return self._tuning
+
+    @contextlib.contextmanager
+    def tuning_override(self, entries: Dict[Tuple[str, Tuple[int, ...]],
+                                            dict]):
+        """Force exact per-``(kind, dims)`` configs for the duration.
+
+        The autotuner's measurement hook: candidate configs are applied
+        through the same lookup path production dispatch uses, bypassing
+        the table and the kill-switch (a tuning run must be able to
+        measure while ``REPRO_NO_TUNING`` protects production traffic).
+        """
+        prev = self._override
+        self._override = lambda kind, dims: entries.get((kind, dims))
+        try:
+            yield self
+        finally:
+            self._override = prev
+
+    def _config_lookup(self, kind: str,
+                       dims: Tuple[int, ...]) -> Optional[dict]:
+        if self._override is not None:
+            return self._override(kind, dims)
+        if os.environ.get("REPRO_NO_TUNING"):
+            return None
+        table = self.tuning_table()
+        if table is None:
+            return None
+        return table.config(kind, dims)
+
+    def ops(self) -> KernelOps:
+        return PallasOps(self._config_lookup)

@@ -42,6 +42,7 @@ from .profile_store import (
 # meant for tests/smoke; "default" is the per-machine calibration;
 # "full" approaches the paper's boxes (minutes of BLAS time).
 GRIDS = {
+    "tiny": (64, 128),
     "small": (64, 128, 256),
     "default": (32, 64, 128, 256, 512, 1024),
     "full": (32, 64, 128, 256, 512, 1024, 1536, 2048),
@@ -202,6 +203,66 @@ def calibrate(
                              wall_s=wall, n_calls=len(profile.table))
 
 
+@dataclasses.dataclass
+class TuneResult:
+    table: object                 # repro.core.tuning.TuningTable
+    fingerprint: HardwareFingerprint
+    path: Optional[Path]          # None when persistence was disabled
+    wall_s: float
+    n_requests: int
+
+
+def tune(
+    backend: str = "pallas",
+    grid: str = "tiny",
+    reps: int = 3,
+    out: Optional[Path] = None,
+    dtype: Optional[str] = None,
+    save: bool = True,
+    budget: int = 8,
+    progress=None,
+) -> TuneResult:
+    """``calibrate --tune``: autotune kernel tiles, persist the winners.
+
+    The tuning sibling of :func:`calibrate`: the same named grids, the
+    same fingerprint, the same cache directory — but the measured object
+    is a :class:`~repro.core.tuning.TuningTable` of winning tile configs
+    (one per ``(kind, dims)``; tri2full has none, and the grid diagonal
+    additionally contributes the two fused patterns), pruned by the
+    roofline pre-filter before any timing and measured under a
+    per-request ``budget``. Only backends whose kernels take tile
+    parameters can be tuned — i.e. ``pallas``.
+    """
+    if grid not in GRIDS:
+        raise ValueError(f"unknown grid {grid!r}; expected {sorted(GRIDS)}")
+    if backend not in registered_backends():
+        raise ValueError(
+            f"unknown backend {backend!r}; registered: "
+            f"{registered_backends()}")
+    dtype = dtype or backend_default_dtype(backend)
+    runner = make_backend(backend, reps=reps, dtype=dtype)
+    if not getattr(runner, "supports_tuning", False):
+        raise ValueError(
+            f"backend {backend!r} has no tunable kernel parameters; "
+            f"--tune requires a tuning-capable backend (pallas)")
+    from repro.kernels.autotune import autotune, default_tune_requests
+    from .tuning import save_tuning_table
+    dims = GRIDS[grid]
+    requests = default_tune_requests(grid_calls(dims), fused_dims=dims)
+    fp = current_fingerprint(backend=backend, dtype=dtype)
+    t0 = time.perf_counter()
+    table = autotune(runner, requests, reps=reps, budget=budget,
+                     progress=progress)
+    wall = time.perf_counter() - t0
+    path = None
+    if save:
+        meta = {"grid": grid, "reps": reps, "budget": budget,
+                "wall_s": round(wall, 3)}
+        path = save_tuning_table(table, fp, directory=out, meta=meta)
+    return TuneResult(table=table, fingerprint=fp, path=path, wall_s=wall,
+                      n_requests=len(requests))
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     from .cli_help import (analysis_rules_epilog, backends_epilog,
                            discriminants_epilog)
@@ -231,8 +292,37 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="dtype label for the fingerprint (default: the "
                          "backend's own, e.g. float64 for blas/numpy, "
                          "float32 for jax/pallas)")
+    ap.add_argument("--tune", action="store_true",
+                    help="autotune kernel tile configs instead of "
+                         "measuring a kernel profile: prune candidate "
+                         "tilings with the roofline pre-filter, time the "
+                         "survivors, persist winners as a TuningTable "
+                         "the pallas backend auto-loads")
+    ap.add_argument("--tune-budget", type=int, default=8,
+                    help="with --tune: max candidate configs timed per "
+                         "(kind, dims) request after pruning")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
+
+    if args.tune:
+        if args.expr is not None:
+            ap.error("--tune and --expr are mutually exclusive")
+
+        def tune_progress(i, n, kind, dims, entry):
+            if not args.quiet:
+                speedup = entry.default_seconds / max(entry.seconds, 1e-12)
+                print(f"  [{i}/{n}] {kind}{dims} -> {entry.config} "
+                      f"({entry.timed} timed, {entry.pruned} pruned, "
+                      f"{speedup:.2f}x vs default)", file=sys.stderr)
+
+        res = tune(backend=args.backend, grid=args.grid, reps=args.reps,
+                   out=args.out, dtype=args.dtype,
+                   budget=args.tune_budget, progress=tune_progress)
+        print(f"tuned {res.n_requests} kernel shapes on "
+              f"{res.fingerprint.backend}/{res.fingerprint.device}"
+              f"/{res.fingerprint.dtype} in {res.wall_s:.1f}s")
+        print(f"tuning table written to {res.path}")
+        return 0
 
     def progress(i: int, n: int, call: KernelCall, seconds: float):
         if not args.quiet and (i % 25 == 0 or i == n):

@@ -154,8 +154,21 @@ class RooflineProfile(KernelProfile):
         return self.hw.peak_flops
 
     def time(self, call: KernelCall, dtype_bytes: int = 2) -> float:
-        comp = call.flops / self.hw.peak_flops
-        mem = call.bytes_moved * dtype_bytes / self.hw.hbm_bw
+        return self.raw_time(call.flops, call.bytes_moved,
+                             dtype_bytes=dtype_bytes)
+
+    def raw_time(self, flops: float, elems_moved: float, *,
+                 dtype_bytes: int = 2) -> float:
+        """Roofline seconds for explicit (FLOPs, elements-moved) counts.
+
+        The same ``max(compute, memory)`` as :meth:`time`, but taking raw
+        counts instead of a :class:`KernelCall` — the autotuner's pruning
+        pre-filter (:mod:`repro.core.tuning`) charges *tiling-dependent*
+        work (block-quantized FLOPs, per-tiling operand re-streaming)
+        that no fixed per-kind ``bytes_moved`` formula can express.
+        """
+        comp = flops / self.hw.peak_flops
+        mem = elems_moved * dtype_bytes / self.hw.hbm_bw
         return max(comp, mem)
 
 

@@ -978,6 +978,15 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--no-flush", action="store_true",
                     help="skip the per-rep cache flush (faster, noisier; "
                          "smoke/CI use)")
+    ap.add_argument("--no-tuning", action="store_true",
+                    help="pallas: ignore any cached TuningTable (sets "
+                         "REPRO_NO_TUNING) — sweep the hard-coded 128 "
+                         "tiles, e.g. to diff the tuned vs default "
+                         "anomaly map")
+    ap.add_argument("--no-fusion", action="store_true",
+                    help="pallas: disable fused adjacent-step dispatch "
+                         "(sets REPRO_NO_FUSION) — every step launches "
+                         "its own kernel")
     ap.add_argument("--limit", type=int, default=None,
                     help="measure at most N new instances this run "
                          "(budgeted partial sweep; resume later)")
@@ -993,6 +1002,14 @@ def main(argv: Optional[List[str]] = None) -> int:
         for cli_name in registered_names():
             print(cli_name)
         return 0
+
+    # Process-wide on purpose: the sweep fans out through jitted closures
+    # and (for process-sharded backends) worker processes that inherit the
+    # environment — a constructor flag could not reach either.
+    if args.no_tuning:
+        os.environ["REPRO_NO_TUNING"] = "1"
+    if args.no_fusion:
+        os.environ["REPRO_NO_FUSION"] = "1"
 
     spec = get_spec(args.expr)
     if args.grid in SWEEP_GRIDS or args.grid in spec.grids:

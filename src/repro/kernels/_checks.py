@@ -1,0 +1,36 @@
+"""Shape/divisibility validation shared by the Pallas kernels.
+
+These used to be bare ``assert`` statements, which vanish under
+``python -O`` — a mis-blocked call would then run the kernel on
+non-divisible dims and silently corrupt the output. Kernels now raise
+:class:`ValueError` naming the offending dim and block so the failure is
+unconditional and diagnosable from the message alone.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+
+def check_divisible(kernel: str,
+                    *constraints: Tuple[str, int, str, int]) -> None:
+    """Each constraint is ``(dim_name, dim, block_name, block)``;
+    raises ``ValueError`` listing every dim not divisible by its block."""
+    bad = [(dn, d, bn, b) for dn, d, bn, b in constraints if d % b != 0]
+    if bad:
+        detail = "; ".join(
+            f"{dn}={d} is not a multiple of block {bn}={b}"
+            for dn, d, bn, b in bad)
+        raise ValueError(
+            f"{kernel}: {detail} (the ops.* wrappers pad to block "
+            f"multiples before calling this kernel)")
+
+
+def check_same(kernel: str, what: str,
+               *values: Tuple[str, int]) -> None:
+    """Each value is ``(source_name, dim)``; raises ``ValueError`` when
+    they disagree (operand shape mismatch on a shared dimension)."""
+    dims = {d for _, d in values}
+    if len(dims) > 1:
+        detail = ", ".join(f"{name}={d}" for name, d in values)
+        raise ValueError(f"{kernel}: {what} mismatch: {detail}")

@@ -1,0 +1,169 @@
+"""The autotuner's measurement loop: time pruned survivors, keep winners.
+
+:mod:`repro.core.tuning` decides *what* deserves timing (candidate
+generation + the roofline/VMEM pre-filter); this module spends the
+measurement budget. Per ``(kind, dims)`` request:
+
+1. prune the candidate space (:func:`~repro.core.tuning.prune_candidates`)
+   — survivors arrive cheapest-modeled-first with the default config
+   force-included, Sankaran & Bientinesi's "measure only the cheapest
+   candidates" budget shape (arXiv 2209.03258);
+2. time each survivor through the backend's existing
+   ``time_algorithm`` path — base kinds as a
+   :func:`~repro.core.backends.base.synthetic_algorithm`, fused kinds as
+   a :func:`~repro.core.backends.base.synthetic_fused_algorithm` —
+   with the candidate config injected via
+   :meth:`~repro.core.backends.jax_backend.PallasBackend.tuning_override`
+   (the exact dispatch path production traffic uses);
+3. record the fastest measured config as a
+   :class:`~repro.core.tuning.TunedEntry`; for gemm, additionally probe
+   the Mosaic ``dimension_semantics`` pipeline knob on the winning tile
+   (one extra timing — it does not move the roofline model, so it is
+   never enumerated into the candidate space).
+
+Operands are synthesized once per request and shared by every candidate
+timing, so candidates race on identical data.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.backends.base import (
+    synthetic_algorithm,
+    synthetic_fused_algorithm,
+)
+from repro.core.flops import KernelCall
+from repro.core.perfmodel import RooflineProfile
+from repro.core.tuning import (
+    DEFAULT_CONFIGS,
+    TUNABLE_KINDS,
+    TunedEntry,
+    TuningTable,
+    prune_candidates,
+)
+
+
+def _request_algorithm(kind: str, dims: Sequence[int]):
+    if kind in ("chain_gemm", "gemm_syrk"):
+        return synthetic_fused_algorithm(kind, dims)
+    return synthetic_algorithm(KernelCall(kind, tuple(dims)))
+
+
+def autotune_request(
+    backend,
+    kind: str,
+    dims: Sequence[int],
+    *,
+    profile: Optional[RooflineProfile] = None,
+    reps: Optional[int] = None,
+    budget: int = 8,
+    slack: float = 2.0,
+) -> TunedEntry:
+    """Tune one ``(kind, dims)``: prune, time survivors, return the winner.
+
+    ``budget`` caps how many configs reach the timer (the pre-filter's
+    ``max_survivors``); ``slack`` is its roofline rejection threshold.
+    ``backend`` must expose ``tuning_override`` (i.e. be a
+    ``PallasBackend``) — candidates are injected through the same config
+    lookup production dispatch uses, so what is measured is exactly what
+    a table hit will later run.
+    """
+    dims = tuple(int(d) for d in dims)
+    dtype_bytes = _dtype_bytes(backend)
+    report = prune_candidates(kind, dims, profile=profile,
+                              dtype_bytes=dtype_bytes, slack=slack,
+                              max_survivors=budget)
+    alg = _request_algorithm(kind, dims)
+    operands = backend.make_operands(alg)
+
+    def _time(config: Dict[str, int]) -> float:
+        with backend.tuning_override({(kind, dims): config}):
+            return backend.time_algorithm(alg, operands, reps=reps)
+
+    timed: List[Tuple[float, Dict[str, int]]] = []
+    default_seconds = None
+    default = DEFAULT_CONFIGS[kind]
+    for config in report.survivors:
+        seconds = _time(config)
+        timed.append((seconds, config))
+        if _tiles_equal(config, default):
+            default_seconds = seconds
+    best_seconds, best_config = min(timed, key=lambda e: e[0])
+    if kind == "gemm":
+        piped = dict(best_config, pipeline=1)
+        piped_seconds = _time(piped)
+        timed.append((piped_seconds, piped))
+        if piped_seconds < best_seconds:
+            best_seconds, best_config = piped_seconds, piped
+    if default_seconds is None:  # pragma: no cover - default is force-kept
+        default_seconds = _time(default)
+    return TunedEntry(
+        config=dict(best_config),
+        seconds=float(best_seconds),
+        default_seconds=float(default_seconds),
+        timed=len(timed),
+        pruned=len(report.rejected),
+    )
+
+
+def autotune(
+    backend,
+    requests: Sequence[Tuple[str, Sequence[int]]],
+    *,
+    profile: Optional[RooflineProfile] = None,
+    reps: Optional[int] = None,
+    budget: int = 8,
+    slack: float = 2.0,
+    progress=None,
+) -> TuningTable:
+    """Tune every ``(kind, dims)`` request into one :class:`TuningTable`."""
+    table = TuningTable()
+    for i, (kind, dims) in enumerate(requests):
+        entry = autotune_request(backend, kind, dims, profile=profile,
+                                 reps=reps, budget=budget, slack=slack)
+        table.set(kind, dims, entry)
+        if progress is not None:
+            progress(i + 1, len(requests), kind, tuple(dims), entry)
+    return table
+
+
+def default_tune_requests(
+    calls: Sequence[KernelCall],
+    fused_dims: Sequence[int] = (),
+) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Tuning requests for a calibration grid's calls + fused diagonals.
+
+    Base kinds come straight from the grid (minus ``tri2full``, which has
+    no tile parameters); the fused patterns have no
+    :class:`~repro.core.flops.KernelCall` representation, so each
+    ``d ∈ fused_dims`` contributes the square-ish shapes
+    ``chain_gemm (d,d,d,d)`` and ``gemm_syrk (d,d,d)``.
+    """
+    requests: List[Tuple[str, Tuple[int, ...]]] = []
+    seen = set()
+    for call in calls:
+        key = (call.kind, call.dims)
+        if call.kind in TUNABLE_KINDS and key not in seen:
+            seen.add(key)
+            requests.append(key)
+    for d in fused_dims:
+        d = int(d)
+        for key in (("chain_gemm", (d, d, d, d)), ("gemm_syrk", (d, d, d))):
+            if key not in seen:
+                seen.add(key)
+                requests.append(key)
+    return requests
+
+
+def _tiles_equal(a: Dict[str, int], b: Dict[str, int]) -> bool:
+    keys = (set(a) | set(b)) - {"pipeline"}
+    return all(a.get(k, 128) == b.get(k, 128) for k in keys)
+
+
+def _dtype_bytes(backend) -> int:
+    import numpy as np
+    try:
+        return int(np.dtype(backend.dtype).itemsize)
+    except TypeError:
+        return 4

@@ -24,8 +24,11 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from ._checks import check_divisible, check_same
 
 
 def _chain_kernel(a_ref, b_ref, c_ref, o_ref, m1_ref, *, bk: int, bl: int):
@@ -73,8 +76,13 @@ def chain_gemm_pallas(
     m, k = a.shape
     k2, l = b.shape
     l2, n = c.shape
-    assert k == k2 and l == l2, (a.shape, b.shape, c.shape)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0 and l % bl == 0
+    check_same("chain_gemm_pallas", "contraction dim k",
+               ("A.shape[1]", k), ("B.shape[0]", k2))
+    check_same("chain_gemm_pallas", "contraction dim l",
+               ("B.shape[1]", l), ("C.shape[0]", l2))
+    check_divisible("chain_gemm_pallas",
+                    ("m", m, "bm", bm), ("n", n, "bn", bn),
+                    ("k", k, "bk", bk), ("l", l, "bl", bl))
 
     return pl.pallas_call(
         functools.partial(_chain_kernel, bk=bk, bl=bl),
@@ -91,6 +99,101 @@ def chain_gemm_pallas(
     )(a, b, c)
 
 
-def chain_gemm_vmem_bytes(m, k, l, n, bm=128, bn=128, dtype_bytes=2) -> int:
-    """Estimated VMEM residency for the fused kernel (wrapper fallback)."""
+def chain_gemm_vmem_bytes(m, k, l, n, bm=128, bn=128, *, dtype_bytes) -> int:
+    """Estimated VMEM residency for the fused kernel (wrapper fallback).
+
+    ``dtype_bytes`` is keyword-required with no default: this estimate
+    used to default to 2 (bf16) while the pallas backend executes f32,
+    halving the footprint the VMEM pre-filter reasoned about. Callers
+    must pass the actual operand itemsize (``a.dtype.itemsize``).
+    """
     return (bm * k + k * l + l * bn) * dtype_bytes + bm * l * 4
+
+
+def _gemm_syrk_kernel(ii_ref, jj_ref, a_i_ref, a_j_ref, b_ref, o_ref,
+                      m1i_ref, m1j_ref, *, bk: int, bm: int):
+    t = pl.program_id(0)
+    i = ii_ref[t]
+    j = jj_ref[t]
+    k_total = a_i_ref.shape[1]
+
+    def _m1(a_ref, out_ref):
+        # Row-block of the intermediate M₁ = A·B, built K-slab by K-slab.
+        def k_body(kk, acc):
+            a_slab = a_ref[:, pl.ds(kk * bk, bk)]
+            b_slab = b_ref[pl.ds(kk * bk, bk), :]
+            return acc + jnp.dot(a_slab, b_slab,
+                                 preferred_element_type=jnp.float32)
+
+        acc0 = jnp.zeros((a_ref.shape[0], b_ref.shape[1]),
+                         dtype=jnp.float32)
+        out_ref[...] = jax.lax.fori_loop(0, k_total // bk, k_body, acc0)
+
+    _m1(a_i_ref, m1i_ref)
+    _m1(a_j_ref, m1j_ref)
+    acc = jnp.dot(m1i_ref[...], m1j_ref[...].T,
+                  preferred_element_type=jnp.float32)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 1)
+    masked = jnp.where(rows >= cols, acc, 0.0)
+    o_ref[...] = jnp.where(i == j, masked, acc).astype(o_ref.dtype)
+
+
+def gemm_syrk_pallas(
+    a: jax.Array,   # (m, k)
+    b: jax.Array,   # (k, l)
+    *,
+    bm: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Lower triangle of (A·B)(A·B)ᵀ without materializing M₁ = A·B in HBM.
+
+    The GEMM+SYRK epilogue fusion: SYRK's triangular block grid (scalar-
+    prefetched ``ii[t], jj[t]`` as in :mod:`repro.kernels.syrk`), but each
+    program rebuilds the two M₁ row-blocks it contracts from A and B in
+    VMEM. Trades ``2·bm·k·l`` recompute FLOPs per program for the full
+    ``m·l`` HBM round-trip of the intermediate — the same trade
+    :func:`chain_gemm_pallas` makes, with SYRK's half-grid savings kept.
+    """
+    m, k = a.shape
+    k2, l = b.shape
+    check_same("gemm_syrk_pallas", "contraction dim k",
+               ("A.shape[1]", k), ("B.shape[0]", k2))
+    check_divisible("gemm_syrk_pallas",
+                    ("m", m, "bm", bm), ("k", k, "bk", bk),
+                    ("l", l, "lane", 128))
+    mt = m // bm
+    ii, jj = np.tril_indices(mt)
+    ii = jnp.asarray(ii, dtype=jnp.int32)
+    jj = jnp.asarray(jj, dtype=jnp.int32)
+    t_blocks = int(ii.shape[0])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(t_blocks,),
+        in_specs=[
+            # A block-row i and block-row j (full K extent, slabbed in-kernel)
+            pl.BlockSpec((bm, k), lambda t, ii, jj: (ii[t], 0)),
+            pl.BlockSpec((bm, k), lambda t, ii, jj: (jj[t], 0)),
+            # B stays fully VMEM-resident across the grid
+            pl.BlockSpec((k, l), lambda t, ii, jj: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bm), lambda t, ii, jj: (ii[t], jj[t])),
+        scratch_shapes=[pltpu.VMEM((bm, l), jnp.float32),
+                        pltpu.VMEM((bm, l), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_gemm_syrk_kernel, bk=bk, bm=bm),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, m), a.dtype),
+        interpret=interpret,
+    )(ii, jj, a, a, b)
+    # Strictly-upper blocks are never written; zero them like syrk_pallas.
+    return jnp.tril(out)
+
+
+def gemm_syrk_vmem_bytes(m, k, l, bm=128, *, dtype_bytes) -> int:
+    """Estimated VMEM residency of the fused GEMM+SYRK kernel."""
+    return (2 * bm * k + k * l) * dtype_bytes + 2 * bm * l * 4 \
+        + bm * bm * dtype_bytes

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._checks import check_divisible, check_same
+
 
 def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
     @pl.when(pl.program_id(2) == 0)
@@ -42,15 +44,29 @@ def gemm_pallas(
     bm: int = 128,
     bn: int = 128,
     bk: int = 128,
+    pipeline: int = 0,
     interpret: bool = False,
 ) -> jax.Array:
     """C[m,n] = A[m,k] @ B[k,n]. Dims must divide the block shape —
-    ``ops.gemm`` pads and unpads around this core."""
+    ``ops.gemm`` pads and unpads around this core.
+
+    ``pipeline=1`` annotates the grid with Mosaic ``dimension_semantics``
+    (M/N parallel, K arbitrary) so the compiler may reorder/parallelize
+    the output-tile dimensions; the autotuner probes this knob on the
+    winning tile shape. Ignored (harmless) in interpret mode.
+    """
     m, k = a.shape
     k2, n = b.shape
-    assert k == k2, (a.shape, b.shape)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    check_same("gemm_pallas", "contraction dim k",
+               ("A.shape[1]", k), ("B.shape[0]", k2))
+    check_divisible("gemm_pallas",
+                    ("m", m, "bm", bm), ("n", n, "bn", bn),
+                    ("k", k, "bk", bk))
     k_steps = k // bk
+    extra = {}
+    if pipeline:
+        extra["compiler_params"] = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
     return pl.pallas_call(
         functools.partial(_gemm_kernel, k_steps=k_steps),
         grid=(m // bm, n // bn, k_steps),
@@ -62,4 +78,5 @@ def gemm_pallas(
         out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
+        **extra,
     )(a, b)

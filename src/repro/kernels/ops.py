@@ -18,7 +18,12 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .chain_gemm import chain_gemm_pallas, chain_gemm_vmem_bytes
+from .chain_gemm import (
+    chain_gemm_pallas,
+    chain_gemm_vmem_bytes,
+    gemm_syrk_pallas,
+    gemm_syrk_vmem_bytes,
+)
 from .flash_attention import flash_attention_pallas
 from .gemm import gemm_pallas
 from .symm import symm_pallas
@@ -38,14 +43,15 @@ def _pad_to(x: jax.Array, mults) -> jax.Array:
     return x
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "pipeline"))
 def gemm(a: jax.Array, b: jax.Array, bm: int = 128, bn: int = 128,
-         bk: int = 128) -> jax.Array:
+         bk: int = 128, pipeline: int = 0) -> jax.Array:
     m, k = a.shape
     _, n = b.shape
     ap = _pad_to(a, (bm, bk))
     bp = _pad_to(b, (bk, bn))
-    out = gemm_pallas(ap, bp, bm=bm, bn=bn, bk=bk, interpret=_interpret())
+    out = gemm_pallas(ap, bp, bm=bm, bn=bn, bk=bk, pipeline=pipeline,
+                      interpret=_interpret())
     return out[:m, :n]
 
 
@@ -88,6 +94,22 @@ def chain_gemm(a: jax.Array, b: jax.Array, c: jax.Array, bm: int = 128,
     out = chain_gemm_pallas(ap, bp, cp, bm=bm, bn=bn, bk=bk, bl=bl,
                             interpret=_interpret())
     return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk"))
+def gemm_syrk(a: jax.Array, b: jax.Array, bm: int = 128,
+              bk: int = 128) -> jax.Array:
+    """Lower triangle of (A·B)(A·B)ᵀ, fused (GEMM+SYRK epilogue)."""
+    m, k = a.shape
+    _, l = b.shape
+    need = gemm_syrk_vmem_bytes(m, k, l, bm,
+                                dtype_bytes=a.dtype.itemsize)
+    if need > _CHAIN_VMEM_LIMIT:
+        return syrk(gemm(a, b))
+    ap = _pad_to(a, (bm, bk))
+    bp = _pad_to(b, (bk, 128))
+    out = gemm_syrk_pallas(ap, bp, bm=bm, bk=bk, interpret=_interpret())
+    return out[:m, :m]
 
 
 @functools.partial(jax.jit, static_argnames=(

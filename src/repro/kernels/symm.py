@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._checks import check_divisible, check_same
+
 
 def _symm_kernel(s_ref, b_ref, o_ref, acc_ref, *, k_steps: int, bm: int):
     i = pl.program_id(0)
@@ -60,8 +62,9 @@ def symm_pallas(
     """C[m,n] = sym(S)·B with S stored lower-triangular; m % bm == 0."""
     m, m2 = s_lower.shape
     mb, n = b.shape
-    assert m == m2 == mb, (s_lower.shape, b.shape)
-    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    check_same("symm_pallas", "symmetric dim m",
+               ("S.shape[0]", m), ("S.shape[1]", m2), ("B.shape[0]", mb))
+    check_divisible("symm_pallas", ("m", m, "bm", bm), ("n", n, "bn", bn))
     k_steps = m // bm
 
     return pl.pallas_call(

@@ -26,6 +26,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._checks import check_divisible
+
 
 def _syrk_kernel(ii_ref, jj_ref, a_ref, at_ref, o_ref, acc_ref,
                  *, k_steps: int, bm: int):
@@ -61,7 +63,7 @@ def syrk_pallas(
 ) -> jax.Array:
     """Lower triangle of A[m,k] @ A[m,k]ᵀ; m % bm == 0, k % bk == 0."""
     m, k = a.shape
-    assert m % bm == 0 and k % bk == 0, (m, k, bm, bk)
+    check_divisible("syrk_pallas", ("m", m, "bm", bm), ("k", k, "bk", bk))
     mt = m // bm
     k_steps = k // bk
     # Host-side triangular index vectors (scalar-prefetched).

@@ -113,6 +113,172 @@ def test_chain_gemm_falls_back_above_vmem_bound():
         np.asarray(ref.chain_gemm(a, b, c)), rtol=1e-3, atol=5e-2)
 
 
+# ----------------------------------------------------------- gemm+syrk ---
+
+@pytest.mark.parametrize("m,k,l", [
+    (128, 128, 128), (130, 70, 64), (256, 384, 128), (65, 200, 130),
+])
+def test_gemm_syrk_matches_ref(m, k, l):
+    a, b = randf(m, k), randf(k, l)
+    m1 = np.asarray(a) @ np.asarray(b)
+    expect = np.tril(m1 @ m1.T)
+    np.testing.assert_allclose(
+        np.asarray(ops.gemm_syrk(a, b)), expect, rtol=1e-4, atol=1e-2)
+
+
+def test_gemm_syrk_strictly_upper_is_zero():
+    a, b = randf(200, 64), randf(64, 96)
+    out = np.asarray(ops.gemm_syrk(a, b))
+    assert np.all(np.triu(out, 1) == 0.0)
+
+
+def test_gemm_syrk_falls_back_above_vmem_bound():
+    a, b = randf(64, 4096), randf(4096, 4096)
+    # f64 oracle + relative tolerance: entries here are ~1e5, and the f32
+    # accumulation-order difference between the fused and fallback paths
+    # is itself ~rtol-sized at this contraction depth.
+    m1 = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+    np.testing.assert_allclose(
+        np.asarray(ops.gemm_syrk(a, b), np.float64), np.tril(m1 @ m1.T),
+        rtol=1e-2, atol=1e-1)
+
+
+# --------------------------------------- pad/unpad path, every kernel ---
+# Non-multiple-of-128 dims exercise the _pad_to → kernel → slice path in
+# ops.py against the numpy oracle (interpret mode on this CPU container).
+
+@settings(max_examples=8, deadline=None)
+@given(m=st.integers(1, 300), k=st.integers(1, 300))
+def test_syrk_hypothesis_pad_unpad(m, k):
+    a = randf(m, k)
+    expect = np.tril(np.asarray(a) @ np.asarray(a).T)
+    np.testing.assert_allclose(np.asarray(ops.syrk(a)), expect,
+                               rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(m=st.integers(1, 300), n=st.integers(1, 300))
+def test_symm_hypothesis_pad_unpad(m, n):
+    low = np.tril(RNG.standard_normal((m, m))).astype(np.float32)
+    b = randf(m, n)
+    full = low + np.tril(low, -1).T
+    np.testing.assert_allclose(
+        np.asarray(ops.symm(jnp.asarray(low), b)),
+        full @ np.asarray(b), rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(m=st.integers(1, 200), k=st.integers(1, 200),
+       l=st.integers(1, 200), n=st.integers(1, 200))
+def test_chain_gemm_hypothesis_pad_unpad(m, k, l, n):
+    a, b, c = randf(m, k), randf(k, l), randf(l, n)
+    expect = (np.asarray(a) @ np.asarray(b)) @ np.asarray(c)
+    np.testing.assert_allclose(np.asarray(ops.chain_gemm(a, b, c)),
+                               expect, rtol=1e-4, atol=1e-2)
+
+
+@settings(max_examples=8, deadline=None)
+@given(m=st.integers(1, 200), k=st.integers(1, 200), l=st.integers(1, 200))
+def test_gemm_syrk_hypothesis_pad_unpad(m, k, l):
+    a, b = randf(m, k), randf(k, l)
+    m1 = np.asarray(a) @ np.asarray(b)
+    np.testing.assert_allclose(np.asarray(ops.gemm_syrk(a, b)),
+                               np.tril(m1 @ m1.T), rtol=1e-4, atol=1e-2)
+
+
+# ------------------------------------------- shape validation (no -O) ---
+
+def test_kernels_raise_valueerror_naming_dim_and_block():
+    from repro.kernels.chain_gemm import chain_gemm_pallas, gemm_syrk_pallas
+    from repro.kernels.gemm import gemm_pallas
+    from repro.kernels.symm import symm_pallas
+    from repro.kernels.syrk import syrk_pallas
+    z = jnp.zeros
+    with pytest.raises(ValueError, match=r"m=130.*bm=128"):
+        gemm_pallas(z((130, 128)), z((128, 128)), interpret=True)
+    with pytest.raises(ValueError, match="contraction dim k"):
+        gemm_pallas(z((128, 64)), z((128, 128)), interpret=True)
+    with pytest.raises(ValueError, match=r"k=100.*bk=128"):
+        syrk_pallas(z((128, 100)), interpret=True)
+    with pytest.raises(ValueError, match=r"n=100.*bn=128"):
+        symm_pallas(z((128, 128)), z((128, 100)), interpret=True)
+    with pytest.raises(ValueError, match=r"l=100.*bl=128"):
+        chain_gemm_pallas(z((128, 128)), z((128, 100)), z((100, 128)),
+                          interpret=True)
+    with pytest.raises(ValueError, match=r"m=130.*bm=128"):
+        gemm_syrk_pallas(z((130, 128)), z((128, 128)), interpret=True)
+
+
+def test_chain_gemm_vmem_bytes_requires_dtype_bytes():
+    from repro.kernels.chain_gemm import chain_gemm_vmem_bytes
+    with pytest.raises(TypeError):
+        chain_gemm_vmem_bytes(128, 128, 128, 128)  # no dtype_bytes
+    f32 = chain_gemm_vmem_bytes(128, 256, 256, 128, dtype_bytes=4)
+    bf16 = chain_gemm_vmem_bytes(128, 256, 256, 128, dtype_bytes=2)
+    assert f32 > bf16  # the old hard-coded 2 halved the f32 footprint
+
+
+# ------------------------------------------- fused dispatch (walker) ---
+
+def _pallas_backend(reps=1):
+    from repro.core.backends.jax_backend import PallasBackend
+    return PallasBackend(reps=reps, tuning=None)
+
+
+@pytest.mark.parametrize("kind,dims", [
+    ("chain_gemm", (130, 70, 64, 150)),
+    ("chain_gemm", (128, 128, 128, 128)),
+    ("gemm_syrk", (130, 70, 64)),
+    ("gemm_syrk", (256, 128, 128)),
+])
+def test_fused_vs_unfused_parity(kind, dims, monkeypatch):
+    from repro.core.backends.base import synthetic_fused_algorithm
+    backend = _pallas_backend()
+    alg = synthetic_fused_algorithm(kind, dims)
+    operands = backend.make_operands(alg)
+    monkeypatch.delenv("REPRO_NO_FUSION", raising=False)
+    assert backend.ops().fused_kinds()  # fusion on: fused launch
+    fused = np.asarray(backend.execute(alg, operands))
+    monkeypatch.setenv("REPRO_NO_FUSION", "1")
+    assert not backend.ops().fused_kinds()  # fusion off: two kernels
+    unfused = np.asarray(backend.execute(alg, operands))
+    np.testing.assert_allclose(fused, unfused, rtol=1e-4, atol=1e-2)
+
+
+def test_fusable_pattern_detection():
+    from repro.core.backends.base import (
+        fusable_pattern,
+        synthetic_fused_algorithm,
+    )
+    chain = synthetic_fused_algorithm("chain_gemm", (128, 128, 128, 128))
+    assert fusable_pattern(chain.steps[0], chain.steps[1], ()) == "gemm+gemm"
+    gs = synthetic_fused_algorithm("gemm_syrk", (128, 128, 128))
+    assert fusable_pattern(gs.steps[0], gs.steps[1], ()) == "gemm+syrk"
+    # A later step consuming the intermediate vetoes the fusion.
+    assert fusable_pattern(chain.steps[0], chain.steps[1],
+                           (chain.steps[1],)) is None
+    # C·(A·B) — the intermediate on the rhs — is not the chain_gemm
+    # shape and must not match.
+    import dataclasses
+    s2 = chain.steps[1]
+    swapped = dataclasses.replace(s2, lhs=s2.rhs, rhs=s2.lhs)
+    assert fusable_pattern(chain.steps[0], swapped, ()) is None
+
+
+def test_enumerated_gram_algorithms_fuse_and_stay_correct():
+    # The real DAGs (not synthetic ones): every enumerated algorithm of a
+    # gram family must produce identical results with fusion on and off.
+    from repro.core import enumerate_algorithms, gram_times
+    backend = _pallas_backend()
+    A = randf(130, 100)
+    B = randf(130, 64)
+    for alg in enumerate_algorithms(gram_times(130, 100, 64)):
+        fn = backend.build(alg)
+        out = np.asarray(fn(A, A, B))
+        expect = (np.asarray(A) @ np.asarray(A).T) @ np.asarray(B)
+        np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-2)
+
+
 # ------------------------------------------------------ flash attention ---
 
 @pytest.mark.parametrize("kwargs", [
