@@ -113,6 +113,16 @@ _LAZY_EXPORTS = {
     "prune_candidates": ".tuning",
     "save_tuning_table": ".tuning",
     "tuning_path": ".tuning",
+    # measurement fast path (arena imports algorithms only; listed lazy to
+    # keep symmetry with the sweep engine that consumes it)
+    "FastPathStats": ".arena",
+    "OperandArena": ".arena",
+    "algorithm_structural_key": ".arena",
+    "arena_for": ".arena",
+    "order_points_for_locality": ".arena",
+    "algorithm_cache_stats": ".expressions",
+    "clear_algorithm_cache": ".expressions",
+    "fastpath_enabled": ".sweep",
     # sweep engine (the `sweep` *function* stays module-scoped to keep the
     # submodule name unambiguous, mirroring calibrate)
     "SWEEP_GRIDS": ".expressions",
@@ -186,6 +196,9 @@ __all__ = [
     "BackendComparison", "BackendDisagreement", "compare_backends",
     "Classification", "ConfusionMatrix", "Region", "classify",
     "cluster_regions", "scan_line",
+    "FastPathStats", "OperandArena", "algorithm_structural_key",
+    "arena_for", "order_points_for_locality",
+    "algorithm_cache_stats", "clear_algorithm_cache", "fastpath_enabled",
     "SWEEP_GRIDS", "AnomalyAtlas", "AtlasError", "GridSpec", "Instance",
     "SweepResult", "atlas_path", "atlas_shard_path",
     "benchmark_unique_calls", "cluster_sweep",

@@ -301,6 +301,8 @@ def adaptive_sweep(
     dtype: str = "float32",
     chunk_size: int = 8,
     progress: Optional[Callable[[int, int, Instance], None]] = None,
+    fastpath: Optional[bool] = None,
+    seed: Optional[int] = None,
 ) -> AdaptiveResult:
     """Boundary-refining sweep: coarse seed, then budgeted frontier rounds.
 
@@ -309,10 +311,13 @@ def adaptive_sweep(
     trajectory budget but zero new measurements, which is what makes a
     resumed run honor the remaining budget instead of the original.
     ``rounds`` caps refinement rounds (``None`` = until budget or
-    convergence). Runner/backend knobs are forwarded verbatim to
+    convergence). Runner/backend knobs — including the fast-path switch
+    and operand ``seed`` — are forwarded verbatim to
     :func:`repro.core.sweep.sweep`; with ``backend="process"`` one pool is
-    reused across every round. ``shard=(k, n)`` requires ``atlas`` to be
-    the host's shard file opened with the same shard identity.
+    reused across every round, so worker arenas and executable memos
+    persist across rounds too (refinement revisits neighbouring shapes).
+    ``shard=(k, n)`` requires ``atlas`` to be the host's shard file opened
+    with the same shard identity.
     """
     import time as _time
 
@@ -359,7 +364,7 @@ def adaptive_sweep(
                     shards=shards, exec_backend=exec_backend, reps=reps,
                     dtype=dtype, chunk_size=chunk_size,
                     threshold=threshold, atlas=atlas, executor=executor,
-                    progress=progress)
+                    progress=progress, fastpath=fastpath, seed=seed)
         for rec in res.records:
             known[rec.point] = rec
         n_sib = n_missing = 0

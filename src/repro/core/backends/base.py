@@ -317,7 +317,8 @@ class ExecutionBackend:
     shard_mode: str = "process"
 
     def __init__(self, reps: int = 3, dtype: Optional[str] = None,
-                 rng: Optional[np.random.Generator] = None):
+                 rng: Optional[np.random.Generator] = None,
+                 seed: Optional[int] = None):
         dtype = dtype or self.default_dtype
         if self.dtypes is not None and dtype not in self.dtypes:
             raise ValueError(
@@ -326,6 +327,11 @@ class ExecutionBackend:
                 f"fingerprint the measurements don't match")
         self.reps = reps
         self.dtype = dtype
+        #: With ``seed`` set, each leaf operand's content is a pure
+        #: function of ``(seed, base, shape)`` — identical across reruns,
+        #: shards, pool workers, and the arena fast path. With it unset
+        #: (legacy default), draws come from ``rng`` in call order.
+        self.seed = seed
         self.rng = rng or np.random.default_rng(0)
 
     # -- subclass hooks ---------------------------------------------------
@@ -368,13 +374,26 @@ class ExecutionBackend:
         for step in alg.steps:
             for ref in (step.lhs, step.rhs):
                 if isinstance(ref, Leaf) and ref.base not in out:
-                    r, c = (ref.cols, ref.rows) if ref.transposed else (
-                        ref.rows, ref.cols)
-                    a = self.rng.standard_normal((*leading, r, c))
-                    if ref.symmetric:
-                        a = (a + np.swapaxes(a, -1, -2)) / 2.0
-                    out[ref.base] = self._asarray(a)
+                    out[ref.base] = self.make_leaf_operand(ref, leading)
         return out
+
+    def make_leaf_operand(self, ref: Leaf,
+                          leading: Tuple[int, ...] = ()) -> object:
+        """One leaf's operand buffer (untransposed, symmetrized, placed).
+
+        This is the unit the operand arena pools: with ``seed`` set the
+        buffer depends only on ``(seed, base, shape)``, so arena-served
+        and freshly synthesized operands are bit-identical and sharded
+        reruns replay exactly.
+        """
+        r, c = (ref.cols, ref.rows) if ref.transposed else (
+            ref.rows, ref.cols)
+        rng = self.rng if self.seed is None else np.random.default_rng(
+            (self.seed, ref.base, r, c))
+        a = rng.standard_normal((*leading, r, c))
+        if ref.symmetric:
+            a = (a + np.swapaxes(a, -1, -2)) / 2.0
+        return self._asarray(a)
 
     def execute(self, alg: Algorithm,
                 operands: Dict[int, object]):

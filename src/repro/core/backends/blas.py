@@ -73,10 +73,11 @@ class BlasBackend(ExecutionBackend):
 
     def __init__(self, reps: int = 10, flush_cache: bool = True,
                  rng: Optional[np.random.Generator] = None,
-                 dtype: Optional[str] = None):
+                 dtype: Optional[str] = None,
+                 seed: Optional[int] = None):
         if _blas is None:  # pragma: no cover
             raise RuntimeError("scipy BLAS unavailable")
-        super().__init__(reps=reps, dtype=dtype, rng=rng)
+        super().__init__(reps=reps, dtype=dtype, rng=rng, seed=seed)
         self.flusher = CacheFlusher() if flush_cache else None
 
     def ops(self) -> KernelOps:

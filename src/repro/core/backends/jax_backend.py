@@ -15,6 +15,7 @@ operand sets, one device dispatch instead of ``batch`` of them.
 
 from __future__ import annotations
 
+import collections
 import contextlib
 import os
 from typing import Callable, Dict, Optional, Tuple
@@ -22,7 +23,47 @@ from typing import Callable, Dict, Optional, Tuple
 import numpy as np
 
 from ..algorithms import Algorithm
+from ..arena import algorithm_structural_key
 from .base import ExecutionBackend, KernelOps, num_inputs
+
+#: Bound on each backend instance's executable memo. Far above any real
+#: family's structure count (the zoo tops out at ~25 per family); evicting
+#: oldest-first keeps autotuning runs (one generation per candidate) from
+#: accumulating dead entries.
+EXEC_MEMO_MAX = 512
+
+#: Opt-in persistent XLA compilation cache (the process-pool / multi-host
+#: story: workers inherit the env var and share compiled programs across
+#: processes and reruns instead of re-compiling per worker).
+XLA_CACHE_ENV = "REPRO_XLA_CACHE_DIR"
+
+_xla_cache_wired = False
+
+
+def _maybe_enable_compilation_cache() -> None:
+    """Point XLA's persistent compilation cache at $REPRO_XLA_CACHE_DIR.
+
+    Best-effort and once per process: older jax versions without the
+    config knob simply keep the in-memory jit cache (the executable memo
+    above it still works).
+    """
+    global _xla_cache_wired
+    if _xla_cache_wired:
+        return
+    _xla_cache_wired = True
+    path = os.environ.get(XLA_CACHE_ENV)
+    if not path:
+        return
+    try:
+        import jax
+        jax.config.update("jax_compilation_cache_dir", path)
+    except Exception:
+        try:
+            from jax.experimental.compilation_cache import (
+                compilation_cache as cc)
+            cc.set_cache_dir(path)  # type: ignore[attr-defined]
+        except Exception:
+            pass
 
 
 def _swap(a):
@@ -159,10 +200,19 @@ class JaxBackend(ExecutionBackend):
     def __init__(self, device=None, reps: int = 3,
                  dtype: Optional[str] = None,
                  rng: Optional[np.random.Generator] = None,
-                 use_pallas: bool = False):
-        super().__init__(reps=reps, dtype=dtype, rng=rng)
+                 use_pallas: bool = False,
+                 seed: Optional[int] = None):
+        super().__init__(reps=reps, dtype=dtype, rng=rng, seed=seed)
         self.device = device
         self.use_pallas = bool(use_pallas)
+        # Executable memo: structural key -> jitted callable. jax.jit's
+        # own cache handles per-shape retraces under one wrapper; this
+        # memo removes the per-point Python build + wrapper construction.
+        self._exec_memo: "collections.OrderedDict[Tuple, Callable]" = (
+            collections.OrderedDict())
+        self.memo_hits = 0
+        self.memo_misses = 0
+        _maybe_enable_compilation_cache()
 
     # -- hooks -------------------------------------------------------------
     def ops(self) -> KernelOps:
@@ -191,18 +241,46 @@ class JaxBackend(ExecutionBackend):
         import jax
         return jax.block_until_ready(out)
 
+    def _memo_generation(self) -> Tuple:
+        """Environment the traced program bakes in beyond its structure.
+
+        The fusion kill-switch is read at trace time by
+        :meth:`PallasOps.fused_kinds`; folding it into the memo key means
+        flipping ``REPRO_NO_FUSION`` mid-process (tests, the
+        ``--compare-backends`` A/B path) never serves a stale executable.
+        """
+        if self.use_pallas:
+            return (bool(os.environ.get("REPRO_NO_FUSION")),)
+        return ()
+
+    def _jitted(self, alg: Algorithm) -> Callable:
+        """The memoised jitted callable for ``alg``'s structure."""
+        import jax
+
+        key = (algorithm_structural_key(alg), self._memo_generation())
+        fn = self._exec_memo.get(key)
+        if fn is not None:
+            self.memo_hits += 1
+            self._exec_memo.move_to_end(key)
+            return fn
+        self.memo_misses += 1
+        fn = jax.jit(self.build(alg))
+        self._exec_memo[key] = fn
+        while len(self._exec_memo) > EXEC_MEMO_MAX:
+            self._exec_memo.popitem(last=False)
+        return fn
+
     def _timed_callable(self, alg: Algorithm,
                         operands: Dict[int, object]) -> Callable[[], object]:
-        """Jit the built callable; compile time lands in the warm-up call.
+        """Memoised jit of the built callable; any remaining compile time
+        lands in the warm-up call.
 
         There is no cache flush on this backend — operands live in HBM
         and the measured quantity is steady-state device time, not the
         paper's cold-cache CPU protocol.
         """
-        import jax
-
         args = self._args(alg, operands)
-        fn = jax.jit(self.build(alg))
+        fn = self._jitted(alg)
         return lambda: fn(*args)
 
     def _args(self, alg: Algorithm, operands: Dict[int, object]) -> list:
@@ -281,18 +359,24 @@ class PallasBackend(JaxBackend):
     def __init__(self, device=None, reps: int = 3,
                  dtype: Optional[str] = None,
                  rng: Optional[np.random.Generator] = None,
-                 use_pallas: bool = True, tuning="auto"):
+                 use_pallas: bool = True, tuning="auto",
+                 seed: Optional[int] = None):
         super().__init__(device=device, reps=reps, dtype=dtype, rng=rng,
-                         use_pallas=use_pallas)
+                         use_pallas=use_pallas, seed=seed)
         self._tuning = tuning          # "auto" | TuningTable | None
         self._tuning_resolved = tuning != "auto"
         self._override: Optional[Callable[
             [str, Tuple[int, ...]], Optional[dict]]] = None
+        #: Bumped whenever the effective config lookup changes (table
+        #: swap, autotuner override enter/exit) — tile configs are baked
+        #: into traced programs, so the executable memo keys on this.
+        self._tuning_generation = 0
 
     def set_tuning(self, table) -> None:
         """Pin a :class:`~repro.core.tuning.TuningTable` (or ``None``)."""
         self._tuning = table
         self._tuning_resolved = True
+        self._tuning_generation += 1
 
     def tuning_table(self):
         """The resolved table (auto-load happens here), or ``None``."""
@@ -315,10 +399,12 @@ class PallasBackend(JaxBackend):
         """
         prev = self._override
         self._override = lambda kind, dims: entries.get((kind, dims))
+        self._tuning_generation += 1
         try:
             yield self
         finally:
             self._override = prev
+            self._tuning_generation += 1
 
     def _config_lookup(self, kind: str,
                        dims: Tuple[int, ...]) -> Optional[dict]:
@@ -330,6 +416,12 @@ class PallasBackend(JaxBackend):
         if table is None:
             return None
         return table.config(kind, dims)
+
+    def _memo_generation(self) -> Tuple:
+        """Fusion + tuning state a traced Pallas program bakes in."""
+        return (bool(os.environ.get("REPRO_NO_FUSION")),
+                bool(os.environ.get("REPRO_NO_TUNING")),
+                self._tuning_generation)
 
     def ops(self) -> KernelOps:
         return PallasOps(self._config_lookup)

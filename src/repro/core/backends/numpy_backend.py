@@ -58,8 +58,9 @@ class NumpyBackend(ExecutionBackend):
 
     def __init__(self, reps: int = 10, flush_cache: bool = True,
                  rng: Optional[np.random.Generator] = None,
-                 dtype: Optional[str] = None):
-        super().__init__(reps=reps, dtype=dtype, rng=rng)
+                 dtype: Optional[str] = None,
+                 seed: Optional[int] = None):
+        super().__init__(reps=reps, dtype=dtype, rng=rng, seed=seed)
         self.flusher = CacheFlusher() if flush_cache else None
 
     def ops(self) -> KernelOps:

@@ -125,6 +125,7 @@ def sweep_kernels(
             f"runner measures dtype {runner_dtype!r} but the sweep was "
             f"asked to label {dtype!r}")
     calls = grid_calls(grid) if calls is None else list(calls)
+    n_calls = len(calls)
     table = {}
     peak = 1.0
     for i, call in enumerate(calls):
@@ -133,7 +134,7 @@ def sweep_kernels(
         if seconds > 0 and call.flops:
             peak = max(peak, call.flops / seconds)
         if progress:
-            progress(i + 1, len(calls), call, seconds)
+            progress(i + 1, n_calls, call, seconds)
     return TableProfile(peak_flops=peak, table=table)
 
 
@@ -146,6 +147,7 @@ def calibrate(
     save: bool = True,
     progress=None,
     expr: Optional[str] = None,
+    seed: Optional[int] = None,
 ) -> CalibrationResult:
     """Measure + persist this machine's kernel profile.
 
@@ -159,6 +161,10 @@ def calibrate(
     the kernel calls that family's named sweep grid enumerates — ``grid``
     then names a *sweep* grid (smoke/small/default/full, with per-family
     overrides) rather than a calibration grid.
+
+    ``seed`` pins operand synthesis: each benchmark operand becomes a
+    pure function of ``(seed, base, shape)``, so two calibration runs of
+    the same grid time bit-identical inputs.
     """
     calls = None
     if expr is not None:
@@ -173,7 +179,7 @@ def calibrate(
     dtype = dtype or backend_default_dtype(backend)
     # Fixed-dtype backends (blas/numpy measure float64 only) raise here on
     # a mismatched label rather than stamping a wrong fingerprint.
-    runner = make_backend(backend, reps=reps, dtype=dtype)
+    runner = make_backend(backend, reps=reps, dtype=dtype, seed=seed)
     fp = current_fingerprint(backend=backend, dtype=dtype)
     t0 = time.perf_counter()
     profile = sweep_kernels(runner, GRIDS.get(grid, ()), reps=reps,
@@ -221,6 +227,7 @@ def tune(
     save: bool = True,
     budget: int = 8,
     progress=None,
+    seed: Optional[int] = None,
 ) -> TuneResult:
     """``calibrate --tune``: autotune kernel tiles, persist the winners.
 
@@ -240,7 +247,7 @@ def tune(
             f"unknown backend {backend!r}; registered: "
             f"{registered_backends()}")
     dtype = dtype or backend_default_dtype(backend)
-    runner = make_backend(backend, reps=reps, dtype=dtype)
+    runner = make_backend(backend, reps=reps, dtype=dtype, seed=seed)
     if not getattr(runner, "supports_tuning", False):
         raise ValueError(
             f"backend {backend!r} has no tunable kernel parameters; "
@@ -301,6 +308,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--tune-budget", type=int, default=8,
                     help="with --tune: max candidate configs timed per "
                          "(kind, dims) request after pruning")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="operand-synthesis seed: benchmark operands "
+                         "become pure functions of (seed, base, shape), "
+                         "so repeat calibrations time identical inputs")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
 
@@ -317,7 +328,8 @@ def main(argv: Optional[List[str]] = None) -> int:
 
         res = tune(backend=args.backend, grid=args.grid, reps=args.reps,
                    out=args.out, dtype=args.dtype,
-                   budget=args.tune_budget, progress=tune_progress)
+                   budget=args.tune_budget, progress=tune_progress,
+                   seed=args.seed)
         print(f"tuned {res.n_requests} kernel shapes on "
               f"{res.fingerprint.backend}/{res.fingerprint.device}"
               f"/{res.fingerprint.dtype} in {res.wall_s:.1f}s")
@@ -331,7 +343,7 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     res = calibrate(backend=args.backend, grid=args.grid, reps=args.reps,
                     out=args.out, dtype=args.dtype, progress=progress,
-                    expr=args.expr)
+                    expr=args.expr, seed=args.seed)
     print(f"calibrated {res.n_calls} kernel shapes on "
           f"{res.fingerprint.backend}/{res.fingerprint.device}"
           f"/{res.fingerprint.dtype} in {res.wall_s:.1f}s "

@@ -38,11 +38,15 @@ Registering a new family (see docs/architecture.md)::
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
+import os
+import threading
 from typing import Callable, Dict, Iterable, List, Mapping, Sequence, Tuple
 
-from .algorithms import Algorithm, chain_leaves, enumerate_algorithms
+from .algorithms import (VERIFY_ENUMERATION_ENV, Algorithm, chain_leaves,
+                         enumerate_algorithms)
 from .expr import (
     Chain,
     Matrix,
@@ -111,6 +115,30 @@ class GridSpec:
 
 # ------------------------------------------------------- expression specs ---
 
+#: Bound on the enumeration LRU. 1024 point-entries comfortably covers the
+#: default grids (6**3 = 216 points) times a handful of families in flight
+#: while capping memory for million-instance adaptive campaigns.
+ALGO_CACHE_MAX = 1024
+
+_ALGO_CACHE: "collections.OrderedDict[Tuple, Tuple[Algorithm, ...]]" = (
+    collections.OrderedDict())
+_ALGO_CACHE_LOCK = threading.Lock()
+_ALGO_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def algorithm_cache_stats() -> Tuple[int, int]:
+    """(hits, misses) of the process-wide enumeration LRU."""
+    with _ALGO_CACHE_LOCK:
+        return (_ALGO_CACHE_STATS["hits"], _ALGO_CACHE_STATS["misses"])
+
+
+def clear_algorithm_cache() -> None:
+    """Drop all memoised enumerations (and reset the hit counters)."""
+    with _ALGO_CACHE_LOCK:
+        _ALGO_CACHE.clear()
+        _ALGO_CACHE_STATS["hits"] = 0
+        _ALGO_CACHE_STATS["misses"] = 0
+
 
 @dataclasses.dataclass(frozen=True)
 class ExpressionSpec:
@@ -143,7 +171,36 @@ class ExpressionSpec:
         return self.build(self._check_point(point))
 
     def algorithms(self, point: Sequence[int]) -> List[Algorithm]:
-        return enumerate_algorithms(self.chain(point))
+        """Enumerated algorithms at ``point``, served from a bounded LRU.
+
+        ``measure_instance``, ``collect_unique_calls``,
+        ``predict_classifications`` and the evaluate path all enumerate
+        the same points; the cache makes re-enumeration free within and
+        across those passes. Keyed by ``(name, build, point)`` — the
+        spec itself is frozen-but-unhashable (its ``grids`` mapping), and
+        ``build`` is a module-level function, so two registry lookups of
+        the same family share entries. Bypassed entirely under
+        ``REPRO_VERIFY_ENUMERATION``: callers opting into per-enumeration
+        verification must not be served unverified cached results.
+        """
+        pt = self._check_point(point)
+        if os.environ.get(VERIFY_ENUMERATION_ENV):
+            return enumerate_algorithms(self.build(pt))
+        key = (self.name, self.build, pt)
+        with _ALGO_CACHE_LOCK:
+            cached = _ALGO_CACHE.get(key)
+            if cached is not None:
+                _ALGO_CACHE.move_to_end(key)
+                _ALGO_CACHE_STATS["hits"] += 1
+                return list(cached)
+        algos = enumerate_algorithms(self.build(pt))
+        with _ALGO_CACHE_LOCK:
+            _ALGO_CACHE_STATS["misses"] += 1
+            _ALGO_CACHE[key] = tuple(algos)
+            _ALGO_CACHE.move_to_end(key)
+            while len(_ALGO_CACHE) > ALGO_CACHE_MAX:
+                _ALGO_CACHE.popitem(last=False)
+        return algos
 
     def verify(self, point: Sequence[int]):
         """Statically verify this family at ``point``; returns findings.

@@ -63,6 +63,13 @@ from typing import Callable, Dict, Iterable, List, Mapping, Optional, Sequence, 
 
 from .algorithms import Algorithm, Leaf
 from .anomaly import Classification, Region, classify, cluster_regions, region_summary
+from .arena import (
+    FastPathStats,
+    OperandArena,
+    arena_for,
+    memo_counts,
+    order_points_for_locality,
+)
 # Expression specs + grids live in repro.core.expressions; the
 # redundant-alias imports re-export them here for backwards compat
 # (pre-registry callers import them from repro.core.sweep).
@@ -82,6 +89,7 @@ from .backends import (
     backend_shard_mode,
     make_backend,
     registered_backends,
+    synthetic_algorithm,
 )
 from .flops import KernelCall
 from .perfmodel import KernelProfile, TableProfile, predict_algorithm_time
@@ -95,6 +103,18 @@ from .profile_store import (
 from .runners import BlasRunner
 
 # --------------------------------------------------- instance measurement ---
+
+#: Kill-switch for the measurement fast path (arena + memo + pipelining).
+#: An env var rather than plumbing so process-pool workers and nested
+#: helpers inherit one decision; ``sweep --no-fastpath`` sets it.
+FASTPATH_ENV = "REPRO_NO_FASTPATH"
+
+
+def fastpath_enabled(flag: Optional[bool] = None) -> bool:
+    """Whether the measurement fast path is on (explicit flag wins)."""
+    if flag is not None:
+        return bool(flag)
+    return not os.environ.get(FASTPATH_ENV)
 
 
 def _leaf_bases(alg: Algorithm) -> set:
@@ -113,19 +133,39 @@ class Instance:
     cls: Classification
 
 
+def _measure_prepared(point, algos, operands, runner,
+                      threshold: float) -> Instance:
+    """Time + classify one point whose algorithms/operands are in hand."""
+    times: Dict[str, float] = {}
+    flops: Dict[str, int] = {}
+    for a in algos:
+        times[a.name] = runner.time_algorithm(a, operands)
+        flops[a.name] = a.flops
+    cls = classify(times, flops, threshold=threshold)
+    return Instance(tuple(int(x) for x in point), times, flops, cls)
+
+
 def measure_instance(
     spec: ExpressionSpec,
     point: Sequence[int],
     runner,
     threshold: float = 0.10,
+    arena: Optional[OperandArena] = None,
 ) -> Instance:
     """Time every algorithm for one instance and classify it.
 
     ``runner`` is any object with ``make_operands(alg) -> dict`` and
     ``time_algorithm(alg, operands) -> seconds`` — every registered
-    :class:`~repro.core.backends.ExecutionBackend` qualifies.
+    :class:`~repro.core.backends.ExecutionBackend` qualifies. With an
+    ``arena``, operand synthesis is served from the shape-keyed pool
+    (each distinct leaf buffer built once per arena lifetime); timing
+    semantics are untouched — the cache-flush protocol runs per rep
+    inside the backend either way.
     """
     algos = spec.algorithms(point)
+    if arena is not None:
+        return _measure_prepared(point, algos, arena.operands(algos),
+                                 runner, threshold)
     times: Dict[str, float] = {}
     flops: Dict[str, int] = {}
     # Leaves are shared across algorithms: synthesize operands once, and
@@ -416,20 +456,34 @@ _worker_runner: Optional[Tuple[object, object]] = None  # (key, runner)
 
 def _measure_chunk(spec: ExpressionSpec, points: Sequence[Tuple[int, ...]],
                    runner_factory: Callable[[], object],
-                   threshold: float) -> List[Instance]:
+                   threshold: float, fastpath: bool = True,
+                   ) -> Tuple[List[Instance], Dict[str, float]]:
     """Process-pool worker: measure one shard of points.
 
     Module-level (picklable); each worker builds its own runner — BLAS
     state, RNGs and cache-flush buffers are never shared across processes
     — and caches it for the worker's lifetime, so the 64 MB flush buffer
-    is zeroed once per worker rather than once per chunk.
+    is zeroed once per worker rather than once per chunk. With the fast
+    path on, the runner's operand arena persists alongside it, so reuse
+    compounds across every chunk the worker sees. Returns the measured
+    instances plus this chunk's fast-path counter deltas.
     """
     global _worker_runner
     key = _factory_key(runner_factory)
     if _worker_runner is None or _worker_runner[0] != key:
         _worker_runner = (key, runner_factory())
     runner = _worker_runner[1]
-    return [measure_instance(spec, p, runner, threshold) for p in points]
+    if not (fastpath and fastpath_enabled()):
+        return ([measure_instance(spec, p, runner, threshold)
+                 for p in points], {})
+    arena = arena_for(runner)
+    stats = FastPathStats()
+    a0, m0 = arena.snapshot(), memo_counts(runner)
+    out = [measure_instance(spec, p, runner, threshold, arena=arena)
+           for p in order_points_for_locality(points)]
+    stats.add_arena_delta(a0, arena.snapshot())
+    stats.add_memo_delta(m0, memo_counts(runner))
+    return out, stats.as_dict()
 
 
 def _chunked(seq: Sequence, size: int) -> List[Sequence]:
@@ -441,15 +495,72 @@ def _run_serial(spec, points, runner, threshold, on_done) -> None:
         on_done(measure_instance(spec, p, runner, threshold))
 
 
+def _run_serial_fastpath(spec, points, runner, threshold, on_done,
+                         stats: FastPathStats) -> None:
+    """Arena + pipelined serial measurement (the ISSUE-10 fast path).
+
+    Points are *measured* in locality order (lexicographic — identical to
+    row-major grid order, so dense sweeps keep their legacy measurement
+    order) while a single helper thread prepares point ``k+1``
+    (enumeration + arena operand synthesis) during point ``k``'s
+    GIL-releasing timed region. Instances are *emitted* strictly in
+    request order through a small reorder buffer, so atlas bytes and
+    progress callbacks are indistinguishable from the legacy path.
+    """
+    from collections import deque
+
+    arena = arena_for(runner)
+    order = order_points_for_locality(points)
+    emit_q = deque(points)                       # request order
+    ready: Dict[Tuple[int, ...], Instance] = {}
+    memo0 = memo_counts(runner)
+    a0 = arena.snapshot()
+
+    def flush_ready() -> None:
+        while emit_q and emit_q[0] in ready:
+            on_done(ready.pop(emit_q.popleft()))
+
+    def prepare(p):
+        t0 = _time.perf_counter()
+        algos = spec.algorithms(p)
+        operands = arena.operands(algos)
+        return p, algos, operands, _time.perf_counter() - t0
+
+    with ThreadPoolExecutor(max_workers=1) as helper:
+        nxt = helper.submit(prepare, order[0])
+        for i in range(len(order)):
+            t_wait = _time.perf_counter()
+            p, algos, operands, prep_s = nxt.result()
+            waited = _time.perf_counter() - t_wait
+            stats.prep_s += prep_s
+            # Preparation time not spent blocking here ran concurrently
+            # with the previous point's timed region.
+            stats.overlap_s += max(0.0, prep_s - waited)
+            if i + 1 < len(order):
+                nxt = helper.submit(prepare, order[i + 1])
+                stats.points_pipelined += 1
+            ready[p] = _measure_prepared(p, algos, operands, runner,
+                                         threshold)
+            flush_ready()
+    flush_ready()
+    stats.add_arena_delta(a0, arena.snapshot())
+    stats.add_memo_delta(memo0, memo_counts(runner))
+
+
 def _run_process_pool(spec, points, runner_factory, threshold, shards,
-                      chunk_size, on_done, executor=None) -> None:
+                      chunk_size, on_done, executor=None,
+                      fastpath: bool = True,
+                      stats: Optional[FastPathStats] = None) -> None:
     """Shard points over a process pool (the BLAS fallback path).
 
     Chunks are submitted eagerly but results are drained as they complete,
     so the atlas keeps filling (and flushing) while workers run — a kill
     mid-pool still leaves every completed chunk on disk. An ``executor``
     passed in is reused and left open (callers measuring many point sets,
-    e.g. Experiment 1's sampling loop, pay process start-up once).
+    e.g. Experiment 1's sampling loop, pay process start-up once). With
+    the fast path on, each chunk is measured in locality order inside its
+    worker (whose arena persists across chunks) and per-chunk counter
+    deltas are merged into ``stats``.
     """
     chunks = _chunked(points, chunk_size)
     own = executor is None
@@ -457,21 +568,26 @@ def _run_process_pool(spec, points, runner_factory, threshold, shards,
         max_workers=shards)
     try:
         pending = {
-            pool.submit(_measure_chunk, spec, c, runner_factory, threshold)
+            pool.submit(_measure_chunk, spec, c, runner_factory, threshold,
+                        fastpath)
             for c in chunks
         }
         while pending:
             done, pending = wait(pending, return_when=FIRST_COMPLETED)
             for fut in done:
-                for inst in fut.result():
+                insts, chunk_stats = fut.result()
+                for inst in insts:
                     on_done(inst)
+                if stats is not None and chunk_stats:
+                    stats.merge(FastPathStats.from_dict(chunk_stats))
     finally:
         if own:
             pool.shutdown()
 
 
 def _run_jax_devices(spec, points, threshold, reps, exec_backend, dtype,
-                     shards, on_done) -> None:
+                     shards, on_done, seed=None, fastpath: bool = True,
+                     stats: Optional[FastPathStats] = None) -> None:
     """Shard points across JAX devices, one pinned backend per device.
 
     Each device gets a round-robin shard and its own registry backend
@@ -480,7 +596,11 @@ def _run_jax_devices(spec, points, threshold, reps, exec_backend, dtype,
     dispatch releases the GIL while devices execute). On a 1-device host
     this degrades to the serial path. Results stream to ``on_done`` per
     instance (serialized by a lock), so the atlas keeps flushing and a
-    killed sweep still resumes from the last chunk.
+    killed sweep still resumes from the last chunk. With the fast path
+    on, each device runner gets its own operand arena and its shard's
+    slice is measured in locality order; the executable memo lives on
+    the runner, so each algorithm *structure* is built/jitted once per
+    device instead of once per point.
     """
     import threading
 
@@ -489,16 +609,24 @@ def _run_jax_devices(spec, points, threshold, reps, exec_backend, dtype,
     devices = jax.devices()
     if shards:
         devices = devices[:shards]
-    runners = [make_backend(exec_backend, device=d, reps=reps, dtype=dtype)
+    runners = [make_backend(exec_backend, device=d, reps=reps, dtype=dtype,
+                            seed=seed)
                for d in devices]
     shards_pts = [points[i::len(devices)] for i in range(len(devices))]
     lock = threading.Lock()
 
     def work(runner, pts):
+        arena = arena_for(runner) if fastpath else None
+        if fastpath:
+            pts = order_points_for_locality(pts)
         for p in pts:
-            inst = measure_instance(spec, p, runner, threshold)
+            inst = measure_instance(spec, p, runner, threshold, arena=arena)
             with lock:
                 on_done(inst)
+        if stats is not None and arena is not None:
+            with lock:
+                stats.add_arena_delta((0, 0, 0), arena.snapshot())
+                stats.add_memo_delta((0, 0), memo_counts(runner))
 
     with ThreadPoolExecutor(max_workers=len(devices)) as pool:
         futs = [pool.submit(work, r, pts)
@@ -518,6 +646,9 @@ class SweepResult:
     n_skipped: int            # points served from the atlas
     wall_s: float
     atlas_path: Optional[Path] = None
+    #: Fast-path counters (arena/memo hits, pipeline overlap); ``None``
+    #: when the legacy path ran (``--no-fastpath`` / REPRO_NO_FASTPATH).
+    fastpath: Optional[FastPathStats] = None
 
     @property
     def n_points(self) -> int:
@@ -555,6 +686,8 @@ def sweep(
     dtype: str = "float32",
     executor=None,
     progress: Optional[Callable[[int, int, Instance], None]] = None,
+    fastpath: Optional[bool] = None,
+    seed: Optional[int] = None,
 ) -> SweepResult:
     """Measure + classify a set of instances — the one measurement path.
 
@@ -585,6 +718,16 @@ def sweep(
     of backend completion order. ``executor`` (process backend only) is an
     existing ``ProcessPoolExecutor`` to reuse across many sweep calls; it
     is left open for the caller.
+
+    ``fastpath`` controls the measurement fast path (operand arena,
+    executable memo, locality ordering, pipelined preparation): ``None``
+    (default) follows the ``REPRO_NO_FASTPATH`` kill-switch, ``True``/
+    ``False`` force it. Timing semantics are identical either way — only
+    per-point fixed costs (allocation, RNG fill, enumeration, re-tracing)
+    are amortised; the result's ``fastpath`` field carries the counters.
+    ``seed`` makes operand synthesis reproducible (each leaf a pure
+    function of ``(seed, base, shape)``) for runners the sweep builds
+    itself; explicit ``runner``/``runner_factory`` carry their own.
     """
     if atlas is not None and abs(atlas.threshold - threshold) > 1e-12:
         raise ValueError(
@@ -623,6 +766,8 @@ def sweep(
 
     measured: Dict[Tuple[int, ...], Instance] = {}
     n_total = len(todo)
+    fp_on = fastpath_enabled(fastpath)
+    stats = FastPathStats() if fp_on else None
     t0 = _time.perf_counter()
 
     def on_done(inst: Instance) -> None:
@@ -643,23 +788,30 @@ def sweep(
                 elif exec_backend is not None:
                     # dtype is the device-backend knob (float32 default);
                     # fixed-dtype CPU backends keep their own default.
-                    kw = {"reps": reps}
+                    kw = {"reps": reps, "seed": seed}
                     if backend_shard_mode(exec_backend) == "device":
                         kw["dtype"] = dtype
                     r = make_backend(exec_backend, **kw)
                 else:
-                    r = BlasRunner(reps=reps)
-            _run_serial(spec, todo, r, threshold, on_done)
+                    r = BlasRunner(reps=reps, seed=seed)
+            if fp_on:
+                _run_serial_fastpath(spec, todo, r, threshold, on_done,
+                                     stats)
+            else:
+                _run_serial(spec, todo, r, threshold, on_done)
         elif backend == "process":
             if runner_factory is None:
                 runner_factory = functools.partial(
-                    make_backend, exec_backend or "blas", reps=reps)
+                    make_backend, exec_backend or "blas", reps=reps,
+                    seed=seed)
             _run_process_pool(spec, todo, runner_factory, threshold,
                               shards or os.cpu_count() or 1, chunk_size,
-                              on_done, executor=executor)
+                              on_done, executor=executor, fastpath=fp_on,
+                              stats=stats)
         elif backend == "jax":
             _run_jax_devices(spec, todo, threshold, reps,
-                             exec_backend or "jax", dtype, shards, on_done)
+                             exec_backend or "jax", dtype, shards, on_done,
+                             seed=seed, fastpath=fp_on, stats=stats)
         else:
             raise ValueError(
                 f"unknown backend {backend!r}; expected serial|process|jax")
@@ -676,6 +828,7 @@ def sweep(
         n_skipped=len(cached),
         wall_s=_time.perf_counter() - t0,
         atlas_path=atlas.path if atlas is not None else None,
+        fastpath=stats,
     )
 
 
@@ -705,6 +858,8 @@ def benchmark_unique_calls(
     profile: Optional[TableProfile] = None,
     reps: Optional[int] = None,
     progress: Optional[Callable[[int, int, KernelCall], None]] = None,
+    arena: Optional[OperandArena] = None,
+    stats: Optional[FastPathStats] = None,
 ) -> Tuple[TableProfile, int, int]:
     """Benchmark the deduplicated call set, reusing ``profile`` entries.
 
@@ -712,18 +867,31 @@ def benchmark_unique_calls(
     covers are never re-measured — so a persisted calibration makes repeat
     sweeps nearly free, and every new measurement lands in the profile for
     the *next* consumer (the calibration-cache feedback loop).
+
+    With an ``arena``, each synthetic call's operands come from the
+    shape-keyed pool (kernel calls across a grid share most shapes); pass
+    ``stats`` to receive the arena/memo reuse counters so calibrate's
+    progress lines show where the time went.
     """
     calls = list(dict.fromkeys(calls))
     if profile is None:
         profile = TableProfile(peak_flops=1.0)
     n_measured = n_reused = 0
+    n_calls = len(calls)
+    a0 = arena.snapshot() if arena is not None else None
+    m0 = memo_counts(runner)
     for i, call in enumerate(calls):
         if call in profile:
             n_reused += 1
             continue
         # One signature across every backend: dtype/device/flush protocol
         # live on the runner instance (see ExecutionBackend.benchmark_call).
-        seconds = runner.benchmark_call(call, reps=reps)
+        if arena is not None:
+            alg = synthetic_algorithm(call)
+            seconds = runner.time_algorithm(alg, arena.operands([alg]),
+                                            reps=reps)
+        else:
+            seconds = runner.benchmark_call(call, reps=reps)
         profile.record(call, seconds)
         n_measured += 1
         if seconds > 0 and call.flops:
@@ -731,7 +899,11 @@ def benchmark_unique_calls(
             # raises peak_flops so efficiency stays a true fraction
             profile.observe_peak(call.flops / seconds)
         if progress is not None:
-            progress(i + 1, len(calls), call)
+            progress(i + 1, n_calls, call)
+    if stats is not None:
+        if arena is not None:
+            stats.add_arena_delta(a0, arena.snapshot())
+        stats.add_memo_delta(m0, memo_counts(runner))
     return profile, n_measured, n_reused
 
 
@@ -987,6 +1159,16 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="pallas: disable fused adjacent-step dispatch "
                          "(sets REPRO_NO_FUSION) — every step launches "
                          "its own kernel")
+    ap.add_argument("--no-fastpath", action="store_true",
+                    help="disable the measurement fast path (operand "
+                         "arena, executable memo, pipelined preparation; "
+                         "sets REPRO_NO_FASTPATH) — timing semantics are "
+                         "identical either way, this is the paranoid "
+                         "bisect switch")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="operand-synthesis seed: every leaf buffer "
+                         "becomes a pure function of (seed, base, shape), "
+                         "so reruns and shards draw identical operands")
     ap.add_argument("--limit", type=int, default=None,
                     help="measure at most N new instances this run "
                          "(budgeted partial sweep; resume later)")
@@ -1010,6 +1192,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         os.environ["REPRO_NO_TUNING"] = "1"
     if args.no_fusion:
         os.environ["REPRO_NO_FUSION"] = "1"
+    if args.no_fastpath:
+        os.environ[FASTPATH_ENV] = "1"
 
     spec = get_spec(args.expr)
     if args.grid in SWEEP_GRIDS or args.grid in spec.grids:
@@ -1082,6 +1266,8 @@ def main(argv: Optional[List[str]] = None) -> int:
           f"anomalies={len(res.anomalies)} "
           f"({res.anomaly_rate:.1%}) in {res.wall_s:.1f}s "
           f"[{res.instances_per_s:.1f} inst/s]")
+    if res.fastpath is not None and res.n_measured:
+        print(f"fastpath: {res.fastpath.summary()}")
     regions = cluster_sweep(res.records, grid)
     print(region_summary(regions, res.n_points))
     print(f"atlas written to {res.atlas_path}")
@@ -1117,16 +1303,20 @@ def _engine_config(name, args) -> dict:
     ``--shards`` asks for it. Shared verbatim by the dense sweep and the
     adaptive engine so both modes measure identically.
     """
+    seed = getattr(args, "seed", None)
     if backend_shard_mode(name) == "device":
         return dict(backend="jax", exec_backend=name, reps=args.reps,
-                    shards=args.shards or None)  # 0 = every device
+                    shards=args.shards or None,  # 0 = every device
+                    seed=seed)
     if args.shards > 1:
         factory = functools.partial(make_backend, name, reps=args.reps,
-                                    flush_cache=not args.no_flush)
+                                    flush_cache=not args.no_flush,
+                                    seed=seed)
         return dict(backend="process", shards=args.shards,
                     runner_factory=factory, reps=args.reps)
     return dict(runner=make_backend(name, reps=args.reps,
-                                    flush_cache=not args.no_flush),
+                                    flush_cache=not args.no_flush,
+                                    seed=seed),
                 reps=args.reps)
 
 
@@ -1235,14 +1425,21 @@ def _main_compare(args, spec, grid, points) -> int:
 def _main_predict(args, spec, grid, points, atlas, dtype, fp) -> int:
     """--mode predict: batched kernel benchmarks → model-only sweep."""
     runner = make_backend(args.backend, reps=args.reps, dtype=dtype,
-                          flush_cache=not args.no_flush)
+                          flush_cache=not args.no_flush,
+                          seed=getattr(args, "seed", None))
     cached = load_default_profile(backend=args.backend, dtype=dtype)
     calls = collect_unique_calls(spec, points)
+    fp_on = fastpath_enabled()
+    arena = arena_for(runner) if fp_on else None
+    stats = FastPathStats() if fp_on else None
     t0 = _time.perf_counter()
     profile, n_meas, n_reused = benchmark_unique_calls(
-        runner, calls, profile=cached, reps=args.reps)
+        runner, calls, profile=cached, reps=args.reps, arena=arena,
+        stats=stats)
     bench_s = _time.perf_counter() - t0
     save_profile(profile, fp, meta={"source": f"sweep:{spec.name}"})
+    if stats is not None and n_meas:
+        _note(f"fastpath: {stats.summary()}", args.quiet)
     predicted = predict_classifications(
         spec, points, profile, threshold=args.threshold,
         dtype_bytes=8 if dtype == "float64" else 4)
